@@ -1,0 +1,189 @@
+"""Benchmarks reproducing the paper's tables/figures at testbed scale.
+
+Mapping to the paper:
+  fig5_selective   — Fig. 5: GraphMP-SS vs GraphMP-NSS per-iteration times +
+                     activation ratios (PageRank / SSSP / WCC on RMAT).
+  fig8_10_engines  — Figs. 8-10 + Table III: per-iteration execution time of
+                     PSW (GraphChi), ESG (X-Stream), DSW (GridGraph),
+                     GraphMP-NC and GraphMP-C; speedup ratios vs GraphMP-C.
+  fig11_memory     — Fig. 11: resident data bytes per engine.
+  table2_io        — Table II: analytic read/write/memory per model, plus
+                     measured-vs-analytic validation from the real engines.
+
+Graphs are synthetic RMAT (the paper's web graphs are power-law; RMAT
+matches the degree skew).  Scale is laptop-sized; the claims validated are
+RELATIVE (I/O ordering, speedups, selective-scheduling effect), which is
+what Table II predicts at any scale.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import apps
+from repro.core.baselines.engines import (
+    DSWEngine, ESGEngine, PSWEngine, prepare_baseline_store,
+)
+from repro.core.baselines.io_model import IOParams, MODELS, io_table
+from repro.core.graph import rmat_graph, small_world_graph
+from repro.core.vsw import VSWEngine
+
+GRAPH_V, GRAPH_E, SHARDS = 20_000, 400_000, 8
+#: the paper's testbed is 4x4TB HDD RAID (~150 MB/s effective); the
+#: container FS is RAM-cached, so the disk-bound regime is emulated with a
+#: bandwidth throttle on the accounted storage channel (EXPERIMENTS.md).
+DISK_BW = 150e6
+
+
+def _mk_graph(seed=0):
+    return rmat_graph(GRAPH_V, GRAPH_E, seed=seed)
+
+
+def fig5_selective(rows: List[str]) -> None:
+    """SS vs NSS.  PageRank on RMAT (slow fp convergence); SSSP/WCC on a
+    high-diameter small-world graph (travelling activity frontier) —
+    the two activation regimes of the paper's Fig. 5."""
+    # WCC regime (paper Fig. 5c): the bulk converges in a few iterations,
+    # then a small active frontier lingers — rmat bulk + a pendant chain.
+    from repro.core.graph import Graph, chain_graph
+
+    bulk = rmat_graph(16_000, 350_000, seed=4)
+    chain_src = np.arange(16_000, 20_000 - 1, dtype=np.int32)
+    wcc_graph = Graph(
+        20_000,
+        np.concatenate([bulk.src, chain_src, [0]]).astype(np.int32),
+        np.concatenate([bulk.dst, chain_src + 1, [16_000]]).astype(np.int32),
+    )
+    # threshold: the paper's default is 0.001 and notes "users can choose a
+    # better value for specific applications" (§II-D-1).  WCC's lingering
+    # frontier is ~18% of vertices but confined to ONE shard, so a higher
+    # threshold exposes the shard-locality win.
+    cases = [
+        ("pagerank", apps.pagerank(), 200, _mk_graph(), 1e-3),
+        ("sssp", apps.sssp(0), 300,
+         small_world_graph(20_000, k=3, shortcuts=0.001, seed=1), 1e-3),
+        ("wcc", apps.wcc(), 300, wcc_graph, 0.3),
+    ]
+    for prog_name, prog, iters, g, threshold in cases:
+        times = {}
+        for mode, selective in (("ss", True), ("nss", False)):
+            with tempfile.TemporaryDirectory() as d:
+                eng = VSWEngine.from_graph(
+                    g, d, num_shards=SHARDS, backend="numpy",
+                    selective=selective, threshold=threshold,
+                    emulate_bw=DISK_BW,
+                    # any-member FPs compound over the active set:
+                    # P(spurious activation) = 1-(1-fp)^|active|, so fp must
+                    # be << 1/|active| (reproduction finding, EXPERIMENTS.md)
+                    bloom_fp=1e-6,
+                )
+                times[mode] = eng.run(prog, max_iters=iters)
+        ss, nss = times["ss"], times["nss"]
+        t_ss = ss.total_time_s
+        t_nss = nss.total_time_s
+        skipped = sum(i.shards_skipped for i in ss.iterations)
+        sel_iters = [i for i in ss.iterations if i.selective_on]
+        rows.append(
+            f"fig5_selective_{prog_name},{t_ss/max(ss.num_iterations,1)*1e6:.0f},"
+            f"overall_speedup={t_nss/max(t_ss,1e-9):.2f}x"
+            f";selective_iters={len(sel_iters)}/{ss.num_iterations}"
+            f";skipped_shards={skipped}"
+            f";final_active_ratio={ss.iterations[-1].active_ratio:.2e}"
+        )
+
+
+def fig8_10_engines(rows: List[str]) -> None:
+    g = _mk_graph(seed=1)
+    iters = 8
+    results: Dict[str, float] = {}
+    reads: Dict[str, float] = {}
+
+    with tempfile.TemporaryDirectory() as d:
+        store = prepare_baseline_store(g, d, num_shards=SHARDS,
+                                       emulate_bw=DISK_BW)
+        for name, cls in (("psw", PSWEngine), ("esg", ESGEngine),
+                          ("dsw", DSWEngine)):
+            io0 = store.io.snapshot()
+            t0 = time.perf_counter()
+            cls(store).run(apps.pagerank(), max_iters=iters)
+            results[name] = (time.perf_counter() - t0) / iters
+            reads[name] = (store.io - io0).bytes_read / iters
+
+    for name, cache in (("graphmp_nc", 0), ("graphmp_c", 1 << 30)):
+        with tempfile.TemporaryDirectory() as d:
+            eng = VSWEngine.from_graph(
+                g, d, num_shards=SHARDS, backend="numpy", selective=True,
+                cache_bytes=cache, cache_mode=3 if cache else 1,
+                emulate_bw=DISK_BW,
+            )
+            t0 = time.perf_counter()
+            r = eng.run(apps.pagerank(), max_iters=iters)
+            results[name] = (time.perf_counter() - t0) / iters
+            reads[name] = r.total_bytes_read / iters
+
+    base = results["graphmp_c"]
+    for name, t in results.items():
+        rows.append(
+            f"fig8_engines_pagerank_{name},{t*1e6:.0f},"
+            f"speedup_vs_graphmp_c={t/base:.2f}x;read_bytes_iter={reads[name]:.0f}"
+        )
+
+
+def fig11_memory(rows: List[str]) -> None:
+    """Resident bytes per engine: VSW holds vertices + cache; baselines
+    hold a partition's worth (Table II memory column, measured)."""
+    g = _mk_graph(seed=2)
+    V, E = g.num_vertices, g.num_edges
+    C, D = 4, 8
+    p = IOParams(C=C, D=D, V=V, E=E, P=SHARDS, N=1, theta=0.0)
+    for key, model in MODELS.items():
+        rows.append(
+            f"fig11_memory_model_{key},{model.memory(p):.0f},analytic_bytes"
+        )
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(
+            g, d, num_shards=SHARDS, cache_bytes=1 << 30, cache_mode=3,
+        )
+        eng.run(apps.pagerank(), max_iters=3)
+        resident = 2 * C * V + eng.cache.stored_bytes
+        rows.append(
+            f"fig11_memory_graphmp_measured,{resident},"
+            f"cache_stored={eng.cache.stored_bytes}"
+            f";compression={eng.cache.stats.compression_ratio:.2f}x"
+        )
+
+
+def table2_io(rows: List[str]) -> None:
+    # the paper's EU-2015 point, analytic
+    p = IOParams(C=4, D=8, V=1.07e9, E=91.8e9, P=4096, N=24, theta=0.3)
+    t = io_table(p)
+    for key, vals in t.items():
+        rows.append(
+            f"table2_io_eu2015_{key},{vals['read']:.3e},"
+            f"write={vals['write']:.3e};memory={vals['memory']:.3e}"
+        )
+    # measured-vs-analytic on the real engines (edge-stream term dominates)
+    g = _mk_graph(seed=3)
+    with tempfile.TemporaryDirectory() as d:
+        store = prepare_baseline_store(g, d, num_shards=SHARDS)
+        pp = IOParams(C=4, D=8, V=g.num_vertices, E=g.num_edges, P=SHARDS)
+        for name, cls in (("esg", ESGEngine), ("dsw", DSWEngine)):
+            io0 = store.io.snapshot()
+            r = cls(store).run(apps.pagerank(), max_iters=3)
+            measured = (store.io - io0).bytes_read / r.num_iterations
+            predicted = MODELS[name].read(pp)
+            rows.append(
+                f"table2_io_validation_{name},{measured:.0f},"
+                f"analytic={predicted:.0f};ratio={measured/predicted:.2f}"
+            )
+
+
+def run(rows: List[str]) -> None:
+    fig5_selective(rows)
+    fig8_10_engines(rows)
+    fig11_memory(rows)
+    table2_io(rows)

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: baseline -> iterate the dominant roofline term.
+
+Three cells (EXPERIMENTS.md §Perf):
+  graphmp/eu-2015     — paper-representative AND most collective-bound.
+  moonshot/train_4k   — most collective-bound LM cell (MoE a2a + FSDP).
+  whisper/train_4k    — worst roofline fraction (replicated attention
+                        intermediates: 20 heads vs 16-way TP axis).
+
+Each iteration re-lowers, re-analyses, and records
+hypothesis -> change -> before -> after.  Run:
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --cell all \
+        --out reports/perf_hillclimb.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import SHAPES
+from repro.launch import dryrun as DR
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+from repro.roofline import hw
+
+
+def _terms_row(name: str, hypothesis: str, t: Dict, extra: str = "") -> Dict:
+    return {
+        "iteration": name,
+        "hypothesis": hypothesis,
+        "compute_s": t["compute_s"],
+        "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"],
+        "dominant": t["dominant"],
+        "extra": extra,
+    }
+
+
+# ------------------------------------------------------------------ graphmp
+def measured_pad_factor(k: int) -> float:
+    """ELL pad factor for a power-law degree sample (row splitting, no
+    windows — matches the distributed superstep's layout)."""
+    from repro.core.graph import rmat_graph
+
+    g = rmat_graph(1 << 18, (1 << 18) * 86, seed=0)  # EU-2015-like avg deg
+    d = g.in_degrees()
+    d = d[d > 0]
+    return float((np.ceil(d / k) * k).sum() / d.sum())
+
+
+def cell_graphmp(rows: List[Dict]) -> None:
+    from repro.configs.graphmp import EU2015
+    from repro.core.distributed import device_graph_specs, make_superstep
+
+    mesh = make_production_mesh(multi_pod=False)
+    n_dev = int(np.prod(mesh.devices.shape))
+    rpd = -(-EU2015.num_vertices // n_dev)
+
+    def lower(msg_dtype, sentinel, k, pad, idx_dtype):
+        specs = device_graph_specs(
+            EU2015.num_vertices, EU2015.num_edges, n_dev,
+            k=k, pad_factor=pad, sentinel=sentinel, index_dtype=idx_dtype,
+        )
+        step, _, _ = make_superstep(
+            mesh, "pagerank", EU2015.num_vertices, rpd,
+            msg_dtype=msg_dtype, sentinel=sentinel,
+        )
+        args = [specs[n] for n in
+                (("src_vals", "ell_idx", "seg", "out_deg") if sentinel else
+                 ("src_vals", "ell_idx", "ell_valid", "seg", "out_deg"))]
+        compiled = step.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        col = RA.parse_collectives(compiled.as_text())
+        mem = compiled.memory_analysis()
+        t = RA.RooflineTerms(
+            float(cost.get("flops", 0) or 0),
+            float(cost.get("bytes accessed", 0) or 0),
+            float(col.total_bytes), n_dev,
+        ).as_dict()
+        t["peak_mem"] = int(mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+        return t
+
+    pad128 = measured_pad_factor(128)
+    base = lower(jnp.float32, False, 128, pad128, jnp.int32)
+    rows.append(_terms_row(
+        "graphmp/base (paper-faithful)",
+        f"all-gather of the f32 SEM working set dominates "
+        f"(4.28GB/dev wire); masked ELL K=128 pad={pad128:.2f}",
+        base, extra=f"pad_factor={pad128:.2f}",
+    ))
+
+    it1 = lower(jnp.bfloat16, False, 128, pad128, jnp.int32)
+    rows.append(_terms_row(
+        "graphmp/it1 bf16 gather",
+        "PR messages tolerate bf16 on the wire (f32 accumulation); "
+        "collective term should halve",
+        it1,
+    ))
+
+    it2 = lower(jnp.bfloat16, True, 128, pad128, jnp.int32)
+    rows.append(_terms_row(
+        "graphmp/it2 +sentinel ELL",
+        "drop the bool validity plane (1B per 4B slot) via fill-value "
+        "gather; memory term -20%",
+        it2,
+    ))
+
+    pad32 = measured_pad_factor(32)
+    it3 = lower(jnp.bfloat16, True, 32, pad32, jnp.int32)
+    rows.append(_terms_row(
+        "graphmp/it3 +K=32",
+        f"K=128 pads {pad128:.2f}x on power-law degrees; K=32 pads "
+        f"{pad32:.2f}x -> fewer streamed edge slots",
+        it3, extra=f"pad_factor={pad32:.2f}",
+    ))
+
+
+# ----------------------------------------------------------------- moonshot
+def cell_moonshot(rows: List[Dict]) -> None:
+    cfg = configs.get_config("moonshot-v1-16b-a3b")
+    shape = SHAPES["train_4k"]
+    mesh = make_production_mesh(multi_pod=True)
+
+    def run(name, hyp, extra_rules=None, cfg_override=None, extra=""):
+        c = cfg if cfg_override is None else cfg_override
+        _, info = DR.lower_cell(
+            c, shape, mesh, microbatches=4, verbose=False,
+            extra_rules=extra_rules,
+        )
+        rows.append(_terms_row(name, hyp, info["terms"], extra=extra))
+        return info
+
+    run("moonshot/base (paper-faithful FSDP+TP+EP)",
+        "MoE expert weights are FSDP-sharded over (pod,data) AND "
+        "expert-sharded over model; per-layer weight all-gathers dominate "
+        "the collective term")
+
+    run("moonshot/it1 EP-only expert weights",
+        "expert weights stay resident (26.6B*2B/16 = 3.3GB/dev) — removing "
+        "the embed-dim FSDP axis deletes the per-layer expert all-gathers",
+        extra_rules={"embed_expert": None})
+
+    run("moonshot/it2 EP + ff-dim sharding",
+        "shard expert d_ff over 'data' instead: weights stay /32-sharded "
+        "(memory of FSDP) but the gather moves to the cheap ff dim with "
+        "local contraction",
+        extra_rules={"embed_expert": None, "mlp_expert": "data"})
+
+    run("moonshot/it3 it1 + capacity 1.0",
+        "a2a dispatch volume scales with capacity; GShard-style cf=1.0 "
+        "cuts the MoE all-to-all wire 20%",
+        extra_rules={"embed_expert": None},
+        cfg_override=dataclasses.replace(cfg, capacity_factor=1.0))
+
+
+# ------------------------------------------------------------------ whisper
+def cell_whisper(rows: List[Dict]) -> None:
+    cfg = configs.get_config("whisper-large-v3")
+    shape = SHAPES["train_4k"]
+    mesh = make_production_mesh(multi_pod=True)
+
+    def run(name, hyp, extra_rules=None, ctx_kwargs=None, cfg_override=None):
+        c = cfg if cfg_override is None else cfg_override
+        _, info = DR.lower_cell(
+            c, shape, mesh, microbatches=4, verbose=False,
+            extra_rules=extra_rules, ctx_kwargs=ctx_kwargs,
+        )
+        rows.append(_terms_row(name, hyp, info["terms"],
+                               extra=f"temp/dev={info['memory']['temp_bytes']/2**30:.1f}GiB"))
+        return info
+
+    run("whisper/base (paper-faithful)",
+        "20 heads don't divide the 16-way TP axis -> attention "
+        "score/prob tensors replicate; memory term explodes (44x compute)")
+
+    run("whisper/it1 seq-parallel attention",
+        "constrain score/prob KEY dim onto the TP axis (always divisible); "
+        "Megatron-SP for attention intermediates -> memory /~3",
+        extra_rules={"kvshard": "model"},
+        ctx_kwargs={"attn_seq_shard": True})
+
+    run("whisper/it2 +bf16 probs",
+        "softmax probabilities stored bf16 (stats stay f32) -> halves the "
+        "biggest remaining buffers",
+        extra_rules={"kvshard": "model"},
+        ctx_kwargs={"attn_seq_shard": True, "attn_bf16_probs": True})
+
+    run("whisper/it3 +vocab padding to /128",
+        "51866 is not divisible by 16 so embeddings/logits replicate; "
+        "padding vocab to 51968 shards them (standard production practice)",
+        extra_rules={"kvshard": "model"},
+        ctx_kwargs={"attn_seq_shard": True, "attn_bf16_probs": True},
+        cfg_override=dataclasses.replace(cfg, vocab_size=51968))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["all", "graphmp", "moonshot", "whisper"])
+    ap.add_argument("--out", default="reports/perf_hillclimb.json")
+    args = ap.parse_args()
+
+    rows: List[Dict] = []
+    t0 = time.time()
+    if args.cell in ("all", "graphmp"):
+        cell_graphmp(rows)
+    if args.cell in ("all", "whisper"):
+        cell_whisper(rows)
+    if args.cell in ("all", "moonshot"):
+        cell_moonshot(rows)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{'iteration':44s} {'compute':>9s} {'memory':>9s} "
+          f"{'collective':>10s} dominant")
+    for r in rows:
+        print(f"{r['iteration']:44s} {r['compute_s']*1e3:8.1f}ms "
+              f"{r['memory_s']*1e3:8.1f}ms {r['collective_s']*1e3:9.1f}ms "
+              f"{r['dominant']}  {r['extra']}")
+    print(f"# {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

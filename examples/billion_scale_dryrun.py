@@ -1,0 +1,71 @@
+"""The paper at pod scale: distributed VSW on EU-2015 (1.07B vertices,
+91.8B edges) — the paper's largest dataset — lowered for a 256-chip pod.
+
+This is the "what would it take" exercise the paper's single-machine
+design motivates: the SEM contract (vertices resident, edges streamed)
+maps onto the mesh as interval-sharded vertex arrays plus a per-superstep
+all-gather of the message array (DESIGN.md §5).
+
+Run standalone (sets the 512-device flag itself):
+
+    PYTHONPATH=src python examples/billion_scale_dryrun.py
+"""
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def main() -> None:
+    from repro.configs.graphmp import EU2015
+    from repro.core.distributed import device_graph_specs, make_superstep
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as RA
+    from repro.roofline import hw
+
+    mesh = make_production_mesh(multi_pod=False)
+    n_dev = int(np.prod(mesh.devices.shape))
+    rows_per_dev = -(-EU2015.num_vertices // n_dev)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    print(f"workload: {EU2015.name} |V|={EU2015.num_vertices:.2e} "
+          f"|E|={EU2015.num_edges:.2e}")
+
+    specs = device_graph_specs(EU2015.num_vertices, EU2015.num_edges, n_dev)
+    for k, v in specs.items():
+        print(f"  input {k}: {v.shape} {v.dtype}")
+
+    step, _, _ = make_superstep(
+        mesh, "pagerank", EU2015.num_vertices, rows_per_dev)
+    lowered = step.lower(
+        specs["src_vals"], specs["ell_idx"], specs["ell_valid"],
+        specs["seg"], specs["out_deg"])
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())
+    cost = compiled.cost_analysis()
+    col = RA.parse_collectives(compiled.as_text())
+    terms = RA.RooflineTerms(
+        flops_per_dev=float(cost.get("flops", 0) or 0),
+        bytes_per_dev=float(cost.get("bytes accessed", 0) or 0),
+        collective_bytes_per_dev=float(col.total_bytes),
+        n_chips=n_dev,
+    )
+    print(f"\nroofline terms per superstep (one PageRank iteration):")
+    print(f"  compute:    {terms.compute_s*1e3:9.3f} ms")
+    print(f"  memory:     {terms.memory_s*1e3:9.3f} ms")
+    print(f"  collective: {terms.collective_s*1e3:9.3f} ms "
+          f"({terms.collective_bytes_per_dev/2**30:.2f} GiB/dev — the "
+          f"all-gathered SEM working set)")
+    print(f"  dominant:   {terms.dominant}")
+    eps = EU2015.num_edges / terms.step_time_s
+    print(f"  edges/s (no-overlap bound): {eps:.3e} "
+          f"(paper's testbed: ~1e9 edges/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: GraphMP on a synthetic power-law graph.
+
+Builds an RMAT graph, preprocesses it into destination-interval shards,
+and runs the paper's three applications through the semi-external-memory
+VSW engine with Bloom-filter selective scheduling and a compressed cache.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core import apps
+from repro.core.graph import rmat_graph
+from repro.core.vsw import VSWEngine
+
+
+def main() -> None:
+    print("== GraphMP quickstart ==")
+    g = rmat_graph(num_vertices=50_000, num_edges=1_000_000, seed=0)
+    print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
+          f"max_in_deg={g.in_degrees().max():,}")
+
+    with tempfile.TemporaryDirectory() as root:
+        engine = VSWEngine.from_graph(
+            g, root,
+            num_shards=16,          # paper: ~18-22M edges/shard at scale
+            backend="jnp",          # numpy | jnp | pallas
+            selective=True,         # Bloom-filter shard skipping (§II-D-1)
+            threshold=1e-3,         # paper's activation-ratio threshold
+            cache_bytes=1 << 28,    # compressed edge cache (§II-D-2)
+            cache_mode=3,           # zlib mode
+        )
+
+        for prog in (apps.pagerank(), apps.sssp(source=0), apps.wcc()):
+            r = engine.run(prog, max_iters=100)
+            skipped = sum(i.shards_skipped for i in r.iterations)
+            print(
+                f"{prog.name:9s} iters={r.num_iterations:3d} "
+                f"converged={r.converged} "
+                f"disk_read={r.total_bytes_read/1e6:7.1f}MB "
+                f"shards_skipped={skipped:4d} "
+                f"cache_hit_rate={engine.cache.stats.hit_rate:.2f}"
+            )
+            if prog.name == "pagerank":
+                top = np.argsort(-r.values)[:5]
+                print(f"          top-5 vertices by rank: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Serving demo: batched prefill + decode with KV caches.
+
+Loads a smoke-scale model, prefills a batch of prompts, then decodes
+tokens autoregressively — the same prefill/decode_step functions the
+dry-run lowers at 32k/512k scale.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2.5-3b]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import smoke_config
+from repro.distributed.sharding import LOCAL_CTX
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=configs.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(configs.get_config(args.arch))
+    params = M.init_params(jax.random.key(0), cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+
+    B, P, G = args.batch, args.prompt_len, args.gen_len
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.prefix_len, cfg.d_model)), jnp.float32)
+    if cfg.encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+
+    prefill = jax.jit(lambda p, b: M.prefill(p, b, cfg, LOCAL_CTX))
+    decode = jax.jit(
+        lambda p, t, kv, i: M.decode_step(p, t, kv, i, cfg, LOCAL_CTX))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch)
+    prefix = cfg.prefix_len if cfg.frontend == "vision_stub" else 0
+    caches = M.pad_caches(caches, cfg, max_seq=P + G + prefix)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits, axis=-1)[:, None]
+    out = [np.asarray(toks)]
+    t0 = time.perf_counter()
+    for step in range(G - 1):
+        logits, caches = decode(
+            params, toks, caches, jnp.int32(P + prefix + step))
+        toks = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(np.asarray(toks))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(out, axis=1)
+    print(f"arch={cfg.name}  batch={B} prompt={P} gen={G}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:.1f} ms total "
+          f"({B*(G-1)/t_decode:.0f} tok/s)")
+    print(f"sample generated ids (row 0): {gen[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""GraphMP core: the paper's semi-external-memory engine (DESIGN.md §1-2).
+
+Public API::
+
+    from repro.core import apps, VSWEngine, rmat_graph
+
+    engine = VSWEngine.from_graph(rmat_graph(1_000_000, 20_000_000), root,
+                                  num_shards=32, cache_bytes=1 << 30)
+    result = engine.run(apps.pagerank())
+"""
+
+from . import apps
+from .graph import (
+    Graph,
+    chain_graph,
+    from_edge_list,
+    rmat_graph,
+    small_world_graph,
+    star_graph,
+    uniform_graph,
+)
+from .vsw import BACKENDS, IterStats, RunResult, VSWEngine
+
+__all__ = [
+    "apps",
+    "Graph",
+    "chain_graph",
+    "from_edge_list",
+    "rmat_graph",
+    "small_world_graph",
+    "star_graph",
+    "uniform_graph",
+    "BACKENDS",
+    "IterStats",
+    "RunResult",
+    "VSWEngine",
+]

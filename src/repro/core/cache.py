@@ -1,0 +1,164 @@
+"""Compressed edge cache (paper §II-D-2).
+
+The VSW model leaves most of a server's memory idle (vertices + the shards
+under processing are small), so GraphMP fills it with an in-application
+shard cache.  A cache hit skips the disk read entirely; to raise the hit
+rate the cached bytes may be compressed, trading decompression CPU for
+eliminated I/O.  The paper's four modes:
+
+=======  ==================  =============================================
+mode     paper codec         this implementation (snappy is unavailable
+                             offline; zlib-1 plays its fast/low-ratio role)
+=======  ==================  =============================================
+mode-1   uncompressed        raw shard bytes
+mode-2   snappy              zlib level 1
+mode-3   zlib-1              zlib level 3
+mode-4   zlib-3              zlib level 6
+=======  ==================  =============================================
+
+Eviction is LRU under a byte budget.  The cache stores the *container
+bytes* (what would have been read from disk), so hit/miss accounting lines
+up exactly with the I/O model's ``θ·D·|E|`` term: ``θ`` is literally
+``misses / lookups`` weighted by shard size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+__all__ = ["CacheMode", "CacheStats", "ShardCache", "MODES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheMode:
+    name: str
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+
+
+MODES: Dict[int, CacheMode] = {
+    1: CacheMode("raw", lambda b: b, lambda b: b),
+    2: CacheMode("fast(zlib-1)", lambda b: zlib.compress(b, 1), zlib.decompress),
+    3: CacheMode("zlib-3", lambda b: zlib.compress(b, 3), zlib.decompress),
+    4: CacheMode("zlib-6", lambda b: zlib.compress(b, 6), zlib.decompress),
+}
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    inserted_bytes_raw: int = 0
+    inserted_bytes_stored: int = 0
+    compress_time_s: float = 0.0
+    decompress_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def compression_ratio(self) -> float:
+        if self.inserted_bytes_stored == 0:
+            return 1.0
+        return self.inserted_bytes_raw / self.inserted_bytes_stored
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = 0
+
+
+class ShardCache:
+    """LRU cache of (optionally compressed) shard container bytes."""
+
+    def __init__(self, capacity_bytes: int, mode: int = 1):
+        if mode not in MODES:
+            raise ValueError(f"unknown cache mode {mode}; valid: {sorted(MODES)}")
+        self.capacity_bytes = capacity_bytes
+        self.mode = MODES[mode]
+        self.mode_id = mode
+        self.stats = CacheStats()
+        self._data: "OrderedDict[int, bytes]" = OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def stored_bytes(self) -> int:
+        return self._bytes
+
+    def get(self, shard_id: int) -> Optional[bytes]:
+        """Return the *raw* (decompressed) shard bytes, or None on miss."""
+        blob = self._data.get(shard_id)
+        if blob is None:
+            self.stats.misses += 1
+            return None
+        self._data.move_to_end(shard_id)
+        t0 = time.perf_counter()
+        raw = self.mode.decompress(blob)
+        self.stats.decompress_time_s += time.perf_counter() - t0
+        self.stats.hits += 1
+        return raw
+
+    def put(self, shard_id: int, raw: bytes) -> bool:
+        """Insert if it fits; returns True if cached."""
+        if shard_id in self._data:
+            return True
+        t0 = time.perf_counter()
+        blob = self.mode.compress(raw)
+        self.stats.compress_time_s += time.perf_counter() - t0
+        if len(blob) > self.capacity_bytes:
+            return False
+        while self._bytes + len(blob) > self.capacity_bytes and self._data:
+            _, old = self._data.popitem(last=False)
+            self._bytes -= len(old)
+            self.stats.evictions += 1
+        self._data[shard_id] = blob
+        self._bytes += len(blob)
+        self.stats.inserted_bytes_raw += len(raw)
+        self.stats.inserted_bytes_stored += len(blob)
+        return True
+
+    def clear(self) -> None:
+        self._data.clear()
+        self._bytes = 0
+
+
+def select_cache_mode(
+    sample_raw: bytes,
+    capacity_bytes: int,
+    total_raw_bytes: int,
+    *,
+    disk_bw: float = 150e6,
+) -> int:
+    """Pick the cheapest mode, GraphH-style (paper §II-D-2 pointer).
+
+    Estimates per-iteration cost = miss_bytes/disk_bw + decompress_time for
+    each mode on a sample shard, choosing the mode that minimises it.  If
+    mode-1 already fits everything, compression is pure overhead and mode-1
+    wins by construction.
+    """
+    best_mode, best_cost = 1, float("inf")
+    for mid, mode in MODES.items():
+        t0 = time.perf_counter()
+        blob = mode.compress(sample_raw)
+        t_comp = time.perf_counter() - t0
+        ratio = len(sample_raw) / max(len(blob), 1)
+        stored_total = total_raw_bytes / ratio
+        cached_frac = min(1.0, capacity_bytes / max(stored_total, 1))
+        miss_bytes = (1.0 - cached_frac) * total_raw_bytes
+        t0 = time.perf_counter()
+        mode.decompress(blob)
+        t_dec = time.perf_counter() - t0
+        dec_per_byte = t_dec / max(len(sample_raw), 1)
+        cost = miss_bytes / disk_bw + cached_frac * total_raw_bytes * dec_per_byte
+        del t_comp
+        if cost < best_cost:
+            best_mode, best_cost = mid, cost
+    return best_mode

@@ -1,0 +1,69 @@
+"""Public wrapper: shard-activity test on device.
+
+``any_active_shards`` evaluates the paper's skip decision for EVERY shard in
+one call: given the per-shard device filters (stacked) and the active-vertex
+id array, returns a bool per shard.  Used by the distributed engine where
+the active set lives on device and per-shard host round-trips would dominate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bloom import BloomFilter32
+
+from .kernel import bloom_contains
+
+_TILE = 1024
+
+
+def pad_items(items: np.ndarray, pad_value: int = -1) -> np.ndarray:
+    n = len(items)
+    n_pad = -(-max(n, 1) // _TILE) * _TILE
+    out = np.full(n_pad, pad_value, dtype=np.int32)
+    out[:n] = items
+    return out
+
+
+def contains(
+    f: BloomFilter32, items: np.ndarray, *, interpret: bool = True
+) -> np.ndarray:
+    """Membership bits for an arbitrary-length query array."""
+    n = len(items)
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    padded = pad_items(items)
+    out = bloom_contains(
+        jnp.asarray(f.words), jnp.asarray(padded),
+        num_bits=f.num_bits, num_hashes=f.num_hashes, interpret=interpret,
+    )
+    return np.asarray(out)[:n]
+
+
+def any_active_shards(
+    filters: Sequence[BloomFilter32],
+    active_ids: np.ndarray,
+    *,
+    interpret: bool = True,
+) -> np.ndarray:
+    """bool [num_shards]: shard p has (possibly) >= 1 active source vertex.
+
+    Padding uses id -1, which hashes like any other value; padded lanes are
+    masked out of the any() reduction so they can never activate a shard.
+    """
+    n = len(active_ids)
+    padded = pad_items(active_ids)
+    mask = np.arange(len(padded)) < n
+    out = np.zeros(len(filters), dtype=bool)
+    for p, f in enumerate(filters):
+        hits = bloom_contains(
+            jnp.asarray(f.words), jnp.asarray(padded),
+            num_bits=f.num_bits, num_hashes=f.num_hashes, interpret=interpret,
+        )
+        out[p] = bool(np.asarray(hits)[mask].any()) if n else False
+    return out

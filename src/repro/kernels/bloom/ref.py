@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for batched Bloom membership (32-bit device variant).
+
+Must be bit-exact with :class:`repro.core.bloom.BloomFilter32` — same hash
+constants, same probe schedule (Kirsch-Mitzenmacher double hashing), same
+power-of-two modulo mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+MUL1 = 0x9E3779B1
+MUL2 = 0x85EBCA77
+ADD = 0x27D4EB2F
+
+
+def hash2_u32(x: jax.Array) -> tuple:
+    x = x.astype(jnp.uint32)
+    h1 = x * jnp.uint32(MUL1)
+    h1 = h1 ^ (h1 >> 15)
+    h2 = (x + jnp.uint32(ADD)) * jnp.uint32(MUL2)
+    h2 = h2 ^ (h2 >> 13)
+    h2 = h2 | jnp.uint32(1)
+    return h1, h2
+
+
+@functools.partial(jax.jit, static_argnames=("num_bits", "num_hashes"))
+def bloom_contains_ref(
+    words: jax.Array,  # uint32 [num_bits // 32]
+    items: jax.Array,  # int32 [n]
+    *,
+    num_bits: int,
+    num_hashes: int,
+) -> jax.Array:
+    """bool [n]: item (possibly) present?"""
+    h1, h2 = hash2_u32(items)
+    hit = jnp.ones(items.shape, dtype=jnp.bool_)
+    for i in range(num_hashes):
+        pos = (h1 + jnp.uint32(i) * h2) & jnp.uint32(num_bits - 1)
+        word = (pos >> 5).astype(jnp.int32)
+        bit = (pos & 31).astype(jnp.uint32)
+        w = jnp.take(words, word, axis=0, mode="clip")
+        hit = hit & (((w >> bit) & jnp.uint32(1)) != 0)
+    return hit

@@ -1,0 +1,247 @@
+"""Pallas TPU kernel: flash attention (online-softmax, causal, GQA-ready).
+
+The same HBM->VMEM sliding-window schedule as the graph kernel, applied to
+the LM hot spot: the KV sequence is streamed block-by-block past a resident
+Q block while softmax statistics (m, l) and the output accumulator live in
+VMEM scratch.
+
+- grid = (BH, n_q_blocks, n_kv_blocks); the kv dim iterates fastest, so the
+  scratch accumulator carries across kv steps of one (bh, q) cell; it is
+  initialised at ik == 0 and divided by l at the last kv step.
+- causal blocks strictly above the diagonal are skipped with ``pl.when``
+  (their DMA still happens in this baseline — see EXPERIMENTS.md §Perf for
+  the index-remap variant that avoids it).
+- all softmax math in f32; inputs may be bf16.
+
+GQA: callers pass K/V already expanded to Hq heads (XLA broadcasts lazily);
+the kernel itself is head-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    causal: bool, scale: float, seq_off: int,
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    iq = pl.program_id(1)
+    bq, d = q_ref.shape[-2], q_ref.shape[-1]
+    bk = k_ref.shape[-2]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq + seq_off  # query positions in KV coordinates
+    k_start = ik * bk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = s.max(axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_prev * alpha + p.sum(axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    if causal:
+        # Skip blocks strictly above the diagonal: kv block start beyond the
+        # last query position of this q block.
+        pl.when(k_start <= q_start + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)  # fully-masked rows stay 0
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _decode_kernel(scale: float, q_ref, k_ref, v_ref, valid_ref,
+                   o_ref, m_ref, l_ref, acc_ref):
+    """One (bh, kv-block) step: q is a resident [G, d] tile (the GQA query
+    group for one kv head); stats carried in VMEM scratch across kv blocks."""
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+    bk = k_ref.shape[-2]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [G, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, bk]
+    mask = valid_ref[0]  # [bk] bool: cache slot holds a live token
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    l_ref[...] = l_prev * alpha + p.sum(axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret")
+)
+def flash_decode(
+    q: jax.Array,  # [BHkv, G, D]   (G = query heads per kv head)
+    k: jax.Array,  # [BHkv, S, D]   (local KV shard)
+    v: jax.Array,  # [BHkv, S, D]
+    valid: jax.Array,  # [BHkv, S] bool — live cache slots
+    *,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token decode attention over a (possibly sharded) KV cache.
+
+    This is the kernel-native layout identified in EXPERIMENTS.md §Perf
+    (whisper it1): each device holds a SLICE of the cache sequence; the
+    kernel emits the un-normalised accumulator plus softmax stats, and the
+    cross-device combine is a cheap psum of (m, l, acc) — no score
+    re-gathering.  ``flash_decode_combine`` performs that merge.
+
+    Returns (o [BHkv, G, D], m [BHkv, G], l [BHkv, G]) with o UN-normalised?
+    — no: o is locally normalised; use flash_decode_combine for multi-shard.
+    """
+    bh, G, d = q.shape
+    S = k.shape[1]
+    if S % block_k:
+        pad = block_k - S % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+        S += pad
+    scale = (d ** -0.5) if scale is None else scale
+    grid = (bh, S // block_k)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda b, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)
+
+
+def decode_partials_ref(q, k, v, valid, *, scale=None):
+    """jnp oracle emitting (o_unnormalised, m, l) for the shard-combine."""
+    bh, G, d = q.shape
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.where(valid[:, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def flash_decode_combine(os, ms, ls):
+    """Merge per-shard partials: os [N,bh,G,D] un-norm, ms/ls [N,bh,G].
+
+    The multi-device form is the same algebra under psum: each device
+    contributes exp(m_i - m*) re-weighted sums.  Used by the seq-sharded
+    decode path instead of re-gathering scores (EXPERIMENTS.md §Perf).
+    """
+    m_star = ms.max(axis=0)  # [bh, G]
+    w = jnp.exp(ms - m_star[None])  # [N, bh, G]
+    l_tot = (ls * w).sum(axis=0)
+    o_tot = (os * w[..., None]).sum(axis=0)
+    return (o_tot / jnp.maximum(l_tot, 1e-30)[..., None])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BH, Skv, D]
+    v: jax.Array,  # [BH, Skv, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"seq lens ({sq},{skv}) need blocks ({block_q},{block_k})")
+    scale = (d ** -0.5) if scale is None else scale
+    seq_off = skv - sq  # decode convention (queries align to the suffix)
+    grid = (bh, sq // block_q, skv // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, causal, scale, seq_off),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

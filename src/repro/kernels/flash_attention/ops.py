@@ -1,0 +1,50 @@
+"""Public attention entry point with selectable implementation.
+
+``attention(..., impl=)``:
+- ``"xla"``    — the jnp reference path.  Used by the model zoo during the
+  CPU dry-run (Pallas TPU kernels only lower on real TPU backends) and as
+  the numerics oracle.
+- ``"pallas"`` — the flash kernel, interpret-mode on CPU, native on TPU.
+
+Both accept GQA layouts [B, Hq, S, D] x [B, Hkv, S, D].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import mha_ref
+
+
+def attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    impl: str = "xla",
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    ac=None,
+    bf16_probs: bool = False,
+) -> jax.Array:
+    if impl == "xla":
+        return mha_ref(q, k, v, causal=causal, ac=ac, bf16_probs=bf16_probs)
+    if impl != "pallas":
+        raise ValueError(f"unknown attention impl {impl!r}")
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    # Expand KV to Hq heads (XLA keeps this as a lazy broadcast).
+    kx = jnp.broadcast_to(k[:, :, None], (B, Hkv, group, Skv, D))
+    vx = jnp.broadcast_to(v[:, :, None], (B, Hkv, group, Skv, D))
+    o = flash_attention(
+        q.reshape(B * Hq, Sq, D),
+        kx.reshape(B * Hq, Skv, D),
+        vx.reshape(B * Hq, Skv, D),
+        causal=causal, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o.reshape(B, Hq, Sq, D)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle: multi-head attention with optional causal mask and GQA.
+
+The contract for the Pallas flash kernel and for the model zoo's XLA
+attention path.  Computes in f32 regardless of input dtype (TPU practice:
+bf16 inputs, f32 softmax/accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    ac=None,  # optional sharding-constraint callback (seq-parallel scores)
+    bf16_probs: bool = False,
+) -> jax.Array:
+    """Grouped-query attention; Hq must be a multiple of Hkv."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    if ac is None:
+        ac = lambda x, *axes: x
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    # seq-parallel: scores' KEY dim onto the TP axis (divisible for any S,
+    # unlike head counts — EXPERIMENTS.md §Perf whisper iteration)
+    s = ac(s, "batch", None, None, None, "kvshard")
+    if causal:
+        # decode convention: the last Sq queries align with the last Sq keys
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    if bf16_probs:
+        p = p.astype(jnp.bfloat16)
+    p = ac(p, "batch", None, None, None, "kvshard")
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf.astype(p.dtype))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)

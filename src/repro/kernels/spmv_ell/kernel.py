@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: windowed row-split ELL pull-update (the VSW hot loop).
+
+Schedule (the kernel-level vertex-centric sliding window, DESIGN.md §2):
+
+- grid = (n_tiles,): one step per (TR, K) tile of ELL rows.
+- scalar prefetch carries ``tile_window[n_tiles]``; the BlockSpec index map
+  of the message table reads it, so each grid step DMAs exactly ONE
+  ``(window,)``-sized slice of the source-message array HBM->VMEM — the
+  sliding window over source vertices.  Pallas double-buffers consecutive
+  grid steps, so tiles sharing a window reuse the resident slice and the
+  DMA of the next window overlaps the current tile's compute.
+- in-VMEM gather ``table[idx]`` (TR x K lookups into a W-entry table) +
+  masked lane reduction -> per-ELL-row partials.
+- the tiny ``seg`` combine (partials -> rows) stays in XLA (ops.py): it is
+  O(|E|/K) work on data already in registers/VMEM scale, not worth a
+  hand-written scatter.
+
+Tile shapes are hardware-aligned: TR=8 sublanes, K=128 lanes, W*4B = 64KB
+VMEM for the fp32 table at the default window of 16384.
+
+Two variants:
+- ``masked``  (paper-faithful layout): validity carried as a bool tile.
+- ``sentinel`` (optimized, §Perf iteration 2): invalid slots point at a
+  dedicated identity slot appended to the table — no mask tile at all,
+  cutting streamed edge bytes by the full mask plane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _reduce(g: jax.Array, combine: str) -> jax.Array:
+    if combine == "sum":
+        return g.sum(axis=1)
+    if combine == "min":
+        return g.min(axis=1)
+    return g.max(axis=1)
+
+
+# ---------------------------------------------------------------- masked
+def _masked_kernel(combine: str, tile_window_ref, idx_ref, valid_ref, msgs_ref,
+                   out_ref):
+    """One (TR, K) tile: gather from the resident window table, mask, reduce."""
+    table = msgs_ref[...]  # [window] VMEM-resident source messages
+    idx = idx_ref[...].astype(jnp.int32)  # [TR, K] window-local indices
+    g = jnp.take(table, idx, axis=0, mode="clip")
+    ident = jnp.asarray(IDENTITY[combine], g.dtype)
+    g = jnp.where(valid_ref[...], g, ident)
+    out_ref[...] = _reduce(g, combine)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tr", "combine", "interpret")
+)
+def ell_partials_masked(
+    ell_idx: jax.Array,  # [n_ell, K] int16/int32 window-local
+    ell_valid: jax.Array,  # [n_ell, K] bool
+    tile_window: jax.Array,  # [n_tiles] int32
+    msgs: jax.Array,  # [num_windows * window]
+    *,
+    window: int,
+    tr: int,
+    combine: str,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-ELL-row partial reductions, [n_ell]."""
+    n_ell, k = ell_idx.shape
+    n_tiles = n_ell // tr
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda i, tw: (i, 0)),
+            pl.BlockSpec((tr, k), lambda i, tw: (i, 0)),
+            # THE sliding window: block index comes from the prefetched
+            # tile->window map, one W-slice of msgs resident per grid step.
+            pl.BlockSpec((window,), lambda i, tw: (tw[i],)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i, tw: (i,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_masked_kernel, combine),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_ell,), msgs.dtype),
+        interpret=interpret,
+    )(tile_window, ell_idx, ell_valid, msgs)
+
+
+# -------------------------------------------------------------- sentinel
+def _sentinel_kernel(combine: str, tile_window_ref, idx_ref, msgs_ref, out_ref):
+    """No mask plane: padding slots index the identity slot of the table."""
+    table = msgs_ref[...]  # [window + pad] last lane(s) hold the identity
+    idx = idx_ref[...].astype(jnp.int32)
+    g = jnp.take(table, idx, axis=0, mode="clip")
+    out_ref[...] = _reduce(g, combine)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tr", "combine", "interpret")
+)
+def ell_partials_sentinel(
+    ell_idx: jax.Array,  # [n_ell, K] indices into the EXTENDED window (W+pad)
+    tile_window: jax.Array,
+    msgs_ext: jax.Array,  # [num_windows * (window + pad)] identity-padded
+    *,
+    window: int,  # EXTENDED window size (W + pad)
+    tr: int,
+    combine: str,
+    interpret: bool = True,
+) -> jax.Array:
+    n_ell, k = ell_idx.shape
+    n_tiles = n_ell // tr
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda i, tw: (i, 0)),
+            pl.BlockSpec((window,), lambda i, tw: (tw[i],)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i, tw: (i,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_sentinel_kernel, combine),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_ell,), msgs_ext.dtype),
+        interpret=interpret,
+    )(tile_window, ell_idx, msgs_ext)

@@ -1,0 +1,108 @@
+"""jit'd public wrappers around the ELL pull-update kernel.
+
+``ell_update`` consumes an :class:`~repro.core.csr.EllShard` (host numpy)
+and the full message array, runs the Pallas partial kernel + the XLA
+segment combine, and returns per-destination accumulations.  It is the
+``pallas`` backend of :class:`~repro.core.vsw.VSWEngine`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import EllShard
+
+from . import kernel as K
+
+IDENTITY = K.IDENTITY
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "tr", "rows", "combine", "variant", "interpret"),
+)
+def _update_jit(
+    ell_idx, ell_valid, seg, tile_window, msgs,
+    *, window, tr, rows, combine, variant, interpret,
+):
+    if variant == "masked":
+        part = K.ell_partials_masked(
+            ell_idx, ell_valid, tile_window, msgs,
+            window=window, tr=tr, combine=combine, interpret=interpret,
+        )
+    else:
+        part = K.ell_partials_sentinel(
+            ell_idx, tile_window, msgs,
+            window=window, tr=tr, combine=combine, interpret=interpret,
+        )
+    if combine == "sum":
+        return jax.ops.segment_sum(part, seg, num_segments=rows)
+    if combine == "min":
+        return jax.ops.segment_min(part, seg, num_segments=rows)
+    return jax.ops.segment_max(part, seg, num_segments=rows)
+
+
+def ell_update(
+    ell: EllShard,
+    msgs: np.ndarray,
+    combine: str,
+    *,
+    variant: str = "masked",
+    interpret: bool = True,
+) -> jax.Array:
+    """acc[rows] for one shard.  msgs is the full |V| message array."""
+    nw = ell.num_windows
+    if variant == "masked":
+        msgs_p = np.zeros(nw * ell.window, msgs.dtype)
+        msgs_p[: msgs.shape[0]] = msgs
+        return _update_jit(
+            jnp.asarray(ell.ell_idx), jnp.asarray(ell.ell_mask),
+            jnp.asarray(ell.seg), jnp.asarray(ell.tile_window),
+            jnp.asarray(msgs_p),
+            window=ell.window, tr=ell.tr, rows=ell.rows, combine=combine,
+            variant=variant, interpret=interpret,
+        )
+    # Sentinel layout: extend each window by one aligned slot-group holding
+    # the combine identity; remap invalid slots to the sentinel position.
+    ext = ell.window + 128  # keep lane alignment
+    msgs_e = np.full(nw * ext, IDENTITY[combine], msgs.dtype)
+    for w in range(nw):
+        lo, hi = w * ell.window, min((w + 1) * ell.window, msgs.shape[0])
+        msgs_e[w * ext : w * ext + (hi - lo)] = msgs[lo:hi]
+    idx = np.where(ell.ell_mask, ell.ell_idx.astype(np.int32), ell.window)
+    return _update_jit(
+        jnp.asarray(idx), None, jnp.asarray(ell.seg),
+        jnp.asarray(ell.tile_window), jnp.asarray(msgs_e),
+        window=ext, tr=ell.tr, rows=ell.rows, combine=combine,
+        variant=variant, interpret=interpret,
+    )
+
+
+def ell_update_arrays(
+    idx_global: jax.Array,  # [n_ell, K] int32 global source ids
+    valid: jax.Array,
+    seg: jax.Array,
+    msgs: jax.Array,  # [num_vertices]
+    rows: int,
+    combine: str,
+) -> jax.Array:
+    """Global-index variant (distributed path): XLA gather + segment combine.
+
+    Used inside shard_map where the full message array is the all-gathered
+    SEM working set; the windowed Pallas kernel is the single-device path.
+    """
+    ident = jnp.asarray(IDENTITY[combine], msgs.dtype)
+    g = jnp.take(msgs, idx_global, axis=0, mode="clip")
+    g = jnp.where(valid, g, ident)
+    if combine == "sum":
+        part = g.sum(axis=1)
+        return jax.ops.segment_sum(part, seg, num_segments=rows)
+    if combine == "min":
+        part = g.min(axis=1)
+        return jax.ops.segment_min(part, seg, num_segments=rows)
+    part = g.max(axis=1)
+    return jax.ops.segment_max(part, seg, num_segments=rows)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the windowed row-split ELL pull-update.
+
+This is the mathematical contract of the VSW hot loop (DESIGN.md §2): given
+per-source message values and a shard in windowed ELL form, produce the
+combined in-edge accumulation per destination row.  The Pallas kernel must
+match this bitwise for sum (same reduction order per row) and exactly for
+min/max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+IDENTITY = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+@functools.partial(jax.jit, static_argnames=("window", "tr", "rows", "combine"))
+def ell_update_ref(
+    ell_idx: jax.Array,  # [n_ell, K] window-local source indices (int)
+    ell_valid: jax.Array,  # [n_ell, K] bool
+    seg: jax.Array,  # [n_ell] local destination row
+    tile_window: jax.Array,  # [n_ell // tr] source-window id per tile
+    msgs: jax.Array,  # [num_windows * window] padded message values
+    *,
+    window: int,
+    tr: int,
+    rows: int,
+    combine: str,
+) -> jax.Array:
+    """Returns acc[rows] = COMBINE over valid slots of msgs[global_idx]."""
+    ident = jnp.asarray(IDENTITY[combine], msgs.dtype)
+    win = jnp.repeat(tile_window, tr)  # [n_ell]
+    gidx = ell_idx.astype(jnp.int32) + win[:, None].astype(jnp.int32) * window
+    g = jnp.take(msgs, gidx, axis=0, mode="clip")
+    g = jnp.where(ell_valid, g, ident)
+    # Empty segments receive the combine identity (segment_min/max fill with
+    # +/-inf for floats, which IS the identity; segment_sum fills with 0).
+    if combine == "sum":
+        part = g.sum(axis=1)
+        return jax.ops.segment_sum(part, seg, num_segments=rows)
+    if combine == "min":
+        part = g.min(axis=1)
+        return jax.ops.segment_min(part, seg, num_segments=rows)
+    part = g.max(axis=1)
+    return jax.ops.segment_max(part, seg, num_segments=rows)
+
+
+def partials_ref(
+    ell_idx, ell_valid, tile_window, msgs, *, window: int, tr: int, combine: str
+):
+    """Just the per-ELL-row partial reduction (what the kernel computes)."""
+    ident = jnp.asarray(IDENTITY[combine], msgs.dtype)
+    win = jnp.repeat(tile_window, tr)
+    gidx = ell_idx.astype(jnp.int32) + win[:, None].astype(jnp.int32) * window
+    g = jnp.take(msgs, gidx, axis=0, mode="clip")
+    g = jnp.where(ell_valid, g, ident)
+    if combine == "sum":
+        return g.sum(axis=1)
+    if combine == "min":
+        return g.min(axis=1)
+    return g.max(axis=1)

@@ -1,0 +1,493 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  - the sharding config is coherent (GSPMD partitions the step function),
+  - it fits HBM (``compiled.memory_analysis()``),
+  - and it yields the roofline inputs (``cost_analysis()`` + HLO collective
+    parse, scan-corrected per EXPERIMENTS.md §Roofline methodology).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+      --out reports/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch graphmp   # the paper
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.config import ModelConfig, SHAPES, ShapeConfig
+from repro.distributed.sharding import (
+    DEFAULT_RULES, SINGLE_POD_RULES, ShardingCtx,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.roofline import analysis as RA
+from repro.roofline import hw
+from repro.train.step import make_train_step
+
+
+# ----------------------------------------------------------------- sharding
+def pick_rules(mesh, shape: ShapeConfig) -> Dict:
+    rules = dict(DEFAULT_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES)
+    # batch axes: greedy subset of (pod, data) that divides global_batch
+    chosen = []
+    rem = shape.global_batch
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            sz = dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+            if rem % sz == 0 and rem >= sz:
+                chosen.append(a)
+                rem //= sz
+    rules["batch"] = tuple(chosen) if chosen else None
+    if shape.mode == "decode":
+        # Flash-decoding-style KV layout: shard the cache SEQUENCE over the
+        # model axis (always divisible; kv-head counts often are not) —
+        # attention reduces over the sharded axis via partial softmax.
+        rules["kvseq"] = "model"
+        rules["heads_kv"] = None
+    if shape.name == "long_500k":
+        # B=1: no data parallelism — spread the 512k cache over data too
+        rules["kvseq"] = ("data", "model")
+    return rules
+
+
+def build_shardings(ctx: ShardingCtx, specs_tree, shapes_tree):
+    """Logical specs -> NamedShardings, dropping axes that don't divide."""
+    mesh = ctx.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= sizes[a]
+            return n
+        return sizes[ax]
+
+    def one(spec, shape_struct):
+        dims = shape_struct.shape
+        mesh_axes = []
+        for i, logical in enumerate(spec):
+            ax = ctx.rules.get(logical) if logical else None
+            if ax is not None and dims[i] % axis_size(ax) != 0:
+                ax = None  # non-divisible: replicate this dim (e.g. whisper vocab)
+            mesh_axes.append(ax)
+        return NamedSharding(mesh, P(*mesh_axes))
+
+    return jax.tree_util.tree_map(
+        one, specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    S = jax.ShapeDtypeStruct
+    B = shape.global_batch
+    if shape.mode == "train":
+        batch = {
+            "tokens": S((B, shape.seq_len), jnp.int32),
+            "labels": S((B, shape.seq_len), jnp.int32),
+        }
+    elif shape.mode == "prefill":
+        batch = {"tokens": S((B, shape.seq_len), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": S((B, 1), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = S((B, cfg.prefix_len, cfg.d_model), jnp.float32)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = S((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_specs_logical(cfg: ModelConfig, batch) -> Dict:
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            out[k] = ("batch", None)
+        else:
+            out[k] = ("batch", None, None)
+    return out
+
+
+# ------------------------------------------------------------- cell lowering
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    compile_s: float = 0.0
+    error: str = ""
+    memory: Optional[Dict] = None
+    terms: Optional[Dict] = None
+    model_flops: float = 0.0
+    hlo_flops_ratio: float = 0.0
+
+
+def _mem_dict(ma) -> Dict:
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "peak_bytes_estimate": int(
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        ),
+    }
+
+
+def _zero_layer(cfg: ModelConfig) -> ModelConfig:
+    kw = {"num_layers": 0}
+    if cfg.encdec:
+        kw["num_encoder_layers"] = 0
+    return dataclasses.replace(cfg, **kw)
+
+
+#: kv-block size for long-sequence prefill (memory-bounded attention path)
+PREFILL_BLOCK_K = 4096
+#: HBM budget for the auto-microbatch fit (leave headroom for XLA slack)
+HBM_BUDGET = int(hw.HBM_BYTES * 0.95)
+
+
+def _batch_shards(shape: ShapeConfig, mesh) -> int:
+    n = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rem = shape.global_batch
+    for a in ("pod", "data"):
+        if a in sizes and rem % sizes[a] == 0 and rem >= sizes[a]:
+            n *= sizes[a]
+            rem //= sizes[a]
+    return n
+
+
+def _auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Initial microbatch guess: residual-carry activations <= ~2 GiB.
+
+    mb is capped at local batch size: beyond that each microbatch's batch
+    dim no longer spans the batch mesh axes and sharding degrades.
+    """
+    b_loc = max(shape.global_batch // _batch_shards(shape, mesh), 1)
+    carry = cfg.num_groups * b_loc * shape.seq_len * cfg.d_model * 2
+    mb = 1
+    while carry / mb > 2 * 2**30 and mb < b_loc:
+        mb *= 2
+    return mb
+
+
+def lower_cell(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+    with_outer_correction: bool = True,
+    rules_override: Optional[Dict] = None,
+    verbose: bool = True,
+    microbatches: Optional[int] = None,  # None = auto-fit
+    attn_block_k: Optional[int] = None,
+    extra_rules: Optional[Dict] = None,  # perf-iteration rule overrides
+    ctx_kwargs: Optional[Dict] = None,  # perf-iteration ShardingCtx flags
+) -> Tuple[object, Dict]:
+    """Lower + compile one cell.  Returns (compiled, info).
+
+    Two-compile scheme: cost/collectives come from the microbatches=1
+    build (same math, exact accounting); memory comes from the build you
+    would actually run (auto-fitted microbatch count).
+    """
+    rules = rules_override or pick_rules(mesh, shape)
+    if extra_rules:
+        rules = {**rules, **extra_rules}
+    if attn_block_k is None:
+        attn_block_k = (
+            PREFILL_BLOCK_K
+            if shape.mode == "prefill" and shape.seq_len > 2 * PREFILL_BLOCK_K
+            else 0
+        )
+    ctx = ShardingCtx(
+        mesh=mesh, rules=rules, attn_impl="xla", attn_block_k=attn_block_k,
+        **(ctx_kwargs or {}),
+    )
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    def compile_variant(c: ModelConfig, want_hlo: bool, mb: int = 1):
+        params_sh = jax.eval_shape(
+            lambda: M.init_params(jax.random.key(0), c, dtype=jnp.bfloat16)
+        )
+        p_shard = build_shardings(ctx, M.param_specs(c), params_sh)
+        batch = input_specs(c, shape)
+        b_shard = build_shardings(
+            ctx, batch_specs_logical(c, batch), batch
+        )
+
+        if shape.mode == "train":
+            opt_dtype = jnp.bfloat16 if c.param_count > 100e9 else jnp.float32
+            opt_sh = jax.eval_shape(lambda: adamw.init(params_sh, opt_dtype))
+            o_shard = adamw.AdamWState(
+                step=NamedSharding(mesh, P()), m=p_shard, v=p_shard
+            )
+            step = make_train_step(
+                c, ctx, adamw.AdamWConfig(), microbatches=mb
+            )
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, None, b_shard),
+                out_shardings=(p_shard, o_shard, None, None),
+                donate_argnums=(0, 1),  # params/opt updated in place
+            )
+            lowered = fn.lower(params_sh, opt_sh, None, batch)
+        elif shape.mode == "prefill":
+            fn = jax.jit(
+                lambda p, b: M.prefill(p, b, c, ctx),
+                in_shardings=(p_shard, b_shard),
+            )
+            lowered = fn.lower(params_sh, batch)
+        else:  # decode
+            max_seq = shape.seq_len + (
+                c.prefix_len if c.frontend == "vision_stub" else 0
+            )
+            caches_sh = jax.eval_shape(
+                lambda: M.init_decode_caches(c, shape.global_batch, max_seq)
+            )
+            cache_logical = {
+                "stack": T.stacked_cache_specs(c),
+                "memory": ("batch", None, None) if c.encdec else None,
+            }
+            c_shard = build_shardings(ctx, cache_logical, caches_sh)
+            fn = jax.jit(
+                lambda p, t, kv, i: M.decode_step(p, t, kv, i, c, ctx),
+                in_shardings=(
+                    p_shard, b_shard["tokens"], c_shard, None,
+                ),
+                out_shardings=(None, c_shard),
+                donate_argnums=(2,),  # KV cache updated in place
+            )
+            lowered = fn.lower(
+                params_sh, batch["tokens"], caches_sh,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        compiled = lowered.compile()
+        hlo = compiled.as_text() if want_hlo else ""
+        return compiled, hlo
+
+    # ---- cost build (mb=1: exact accounting)
+    t0 = time.time()
+    compiled, hlo = compile_variant(cfg, want_hlo=True, mb=1)
+    cost = compiled.cost_analysis()
+
+    # ---- memory build (the config you would run)
+    if shape.mode == "train":
+        mb = microbatches or _auto_microbatches(cfg, shape, mesh)
+        mb_cap = max(shape.global_batch // _batch_shards(shape, mesh), 1)
+        while True:
+            mem_compiled, _ = (
+                (compiled, "") if mb == 1
+                else compile_variant(cfg, want_hlo=False, mb=mb)
+            )
+            mem = mem_compiled.memory_analysis()
+            peak = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            tpu_est = mem.argument_size_in_bytes + mem.temp_size_in_bytes // 2
+            if tpu_est <= HBM_BUDGET or mb * 2 > mb_cap or microbatches:
+                break
+            mb *= 2
+    else:
+        mb = 1
+        mem = compiled.memory_analysis()
+        peak = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+    compile_s = time.time() - t0
+
+    if verbose:
+        print(f"    memory_analysis: {mem}")
+        print(f"    cost_analysis: flops={cost.get('flops', 0):.4g} "
+              f"bytes={cost.get('bytes accessed', 0):.4g}  (mb={mb})")
+
+    # XLA CPU's FloatNormalization upcasts bf16 compute buffers to f32;
+    # TPU keeps them bf16.  Arguments retain true dtypes, so a TPU peak
+    # estimate halves the temp term (documented in EXPERIMENTS.md).
+    peak_tpu_est = mem.argument_size_in_bytes + mem.temp_size_in_bytes // 2
+    info: Dict = {
+        "compile_s": compile_s,
+        "memory": _mem_dict(mem),
+        "peak_tpu_est": int(peak_tpu_est),
+        "fits_hbm": bool(peak_tpu_est <= hw.HBM_BYTES),
+        "microbatches": mb,
+        "attn_block_k": attn_block_k,
+        "n_chips": n_chips,
+        "rules": {k: str(v) for k, v in rules.items()},
+    }
+
+    if with_outer_correction:
+        outer_compiled, _ = compile_variant(_zero_layer(cfg), want_hlo=False)
+        outer_cost = outer_compiled.cost_analysis()
+        trips = cfg.num_groups
+        extra = None
+        if cfg.encdec:
+            mid_cfg = dataclasses.replace(cfg, num_encoder_layers=0)
+            mid_compiled, _ = compile_variant(mid_cfg, want_hlo=False)
+            # encoder scan trips differ from decoder trips
+            extra = [(mid_compiled.cost_analysis(), cfg.num_encoder_layers)]
+        terms = RA.corrected_terms(
+            dict(cost), dict(outer_cost), hlo, trips, n_chips,
+            extra_scans=extra,
+        )
+        if attn_block_k:
+            # blocked path hides attention flops inside the kv loop: add
+            # the analytic total (documented in EXPERIMENTS.md methodology)
+            af, ab = RA.attention_analytic(cfg, shape, shape.mode)
+            terms = RA.RooflineTerms(
+                flops_per_dev=terms.flops_per_dev + af / n_chips,
+                bytes_per_dev=terms.bytes_per_dev + ab / n_chips,
+                collective_bytes_per_dev=terms.collective_bytes_per_dev,
+                n_chips=n_chips,
+            )
+        info["terms"] = terms.as_dict()
+        mf = RA.model_flops(cfg, shape, shape.mode)
+        info["model_flops_global"] = mf
+        hlo_global = terms.flops_per_dev * n_chips
+        info["model_vs_hlo_flops"] = mf / hlo_global if hlo_global else 0.0
+    return compiled, info
+
+
+# ------------------------------------------------------------------- graphmp
+def lower_graphmp(mesh, workload: str = "eu-2015", verbose: bool = True) -> Dict:
+    """Dry-run the paper's own engine at billion-vertex scale."""
+    from repro.configs.graphmp import WORKLOADS
+    from repro.core.distributed import device_graph_specs, make_superstep
+
+    w = WORKLOADS[workload]
+    n_dev = int(np.prod(mesh.devices.shape))
+    rows_per_dev = -(-w.num_vertices // n_dev)
+    specs = device_graph_specs(w.num_vertices, w.num_edges, n_dev)
+    step, in_sh, _ = make_superstep(
+        mesh, "pagerank", w.num_vertices, rows_per_dev
+    )
+    t0 = time.time()
+    lowered = step.lower(
+        specs["src_vals"], specs["ell_idx"], specs["ell_valid"],
+        specs["seg"], specs["out_deg"],
+    )
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    col = RA.parse_collectives(compiled.as_text(), loop_trips=1)
+    terms = RA.RooflineTerms(
+        flops_per_dev=float(cost.get("flops", 0.0) or 0.0),
+        bytes_per_dev=float(cost.get("bytes accessed", 0.0) or 0.0),
+        collective_bytes_per_dev=float(col.total_bytes),
+        n_chips=n_dev,
+    )
+    if verbose:
+        print(f"    memory_analysis: {mem}")
+        print(f"    cost_analysis: flops={terms.flops_per_dev:.4g}")
+        print(f"    collective bytes/dev: {terms.collective_bytes_per_dev:.4g}")
+    return {
+        "compile_s": dt,
+        "memory": _mem_dict(mem),
+        "terms": terms.as_dict(),
+        "n_chips": n_dev,
+        "workload": workload,
+    }
+
+
+# ----------------------------------------------------------------------- CLI
+def run(arch: str, shape_names, mesh_kinds, out: Optional[str] = None,
+        fail_fast: bool = False) -> list:
+    results = []
+    arch_list = configs.list_archs() if arch == "all" else [arch]
+
+    for mesh_kind in mesh_kinds:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        print(f"=== mesh {mesh_kind}: {dict(zip(mesh.axis_names, mesh.devices.shape))} ===")
+        for a in arch_list:
+            if a == "graphmp":
+                continue
+            cfg = configs.get_config(a)
+            shapes = shape_names or configs.applicable_shapes(a)
+            for sname in shapes:
+                if sname not in configs.applicable_shapes(a):
+                    print(f"  {a} x {sname}: SKIPPED (inapplicable, DESIGN.md §4)")
+                    continue
+                shape = SHAPES[sname]
+                print(f"  {a} x {sname} [{shape.mode}] ...", flush=True)
+                try:
+                    _, info = lower_cell(cfg, shape, mesh)
+                    results.append(dataclasses.asdict(CellResult(
+                        arch=a, shape=sname, mesh=mesh_kind, ok=True,
+                        compile_s=info["compile_s"], memory=info["memory"],
+                        terms=info.get("terms"),
+                        model_flops=info.get("model_flops_global", 0.0),
+                        hlo_flops_ratio=info.get("model_vs_hlo_flops", 0.0),
+                    )))
+                    print(f"    OK compile={info['compile_s']:.1f}s "
+                          f"peak_mem/dev={info['memory']['peak_bytes_estimate']/2**30:.2f}GiB")
+                except Exception as e:
+                    traceback.print_exc()
+                    results.append(dataclasses.asdict(CellResult(
+                        arch=a, shape=sname, mesh=mesh_kind, ok=False,
+                        error=f"{type(e).__name__}: {e}"[:500],
+                    )))
+                    if fail_fast:
+                        raise
+        if arch in ("all", "graphmp"):
+            print(f"  graphmp x eu-2015 [superstep] ...", flush=True)
+            try:
+                info = lower_graphmp(mesh)
+                results.append(dataclasses.asdict(CellResult(
+                    arch="graphmp", shape="eu-2015", mesh=mesh_kind, ok=True,
+                    compile_s=info["compile_s"], memory=info["memory"],
+                    terms=info["terms"],
+                )))
+            except Exception as e:
+                traceback.print_exc()
+                results.append(dataclasses.asdict(CellResult(
+                    arch="graphmp", shape="eu-2015", mesh=mesh_kind,
+                    ok=False, error=str(e)[:500],
+                )))
+                if fail_fast:
+                    raise
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n==== dry-run: {n_ok}/{len(results)} cells compiled ====")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default=None,
+                    help="comma-separated shape names (default: all applicable)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+    shapes = args.shape.split(",") if args.shape else None
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run(args.arch, shapes, meshes, out=args.out,
+                  fail_fast=args.fail_fast)
+    if not all(r["ok"] for r in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

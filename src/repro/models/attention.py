@@ -1,0 +1,205 @@
+"""GQA attention block: projections, RoPE, KV cache, cross-attention.
+
+The score/softmax/value computation is delegated to
+``repro.kernels.flash_attention.ops.attention`` (impl selectable: "xla" for
+dry-run/CPU, "pallas" on TPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels.flash_attention.ops import attention
+
+from . import common as C
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": C.linear_init(ks[0], d, qd, bias=cfg.qkv_bias),
+        "wk": C.linear_init(ks[1], d, kvd, bias=cfg.qkv_bias),
+        "wv": C.linear_init(ks[2], d, kvd, bias=cfg.qkv_bias),
+        "wo": C.linear_init(ks[3], qd, d),
+    }
+
+
+def attn_specs(cfg: ModelConfig):
+    return {
+        "wq": C.linear_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wk": C.linear_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wv": C.linear_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wo": C.linear_specs("qkv", "embed"),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def blocked_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Skv, Hkv, hd]
+    v: jax.Array,  # [B, Skv, Hkv, hd]
+    *,
+    block_k: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Flash-style online-softmax attention, kv-blocked via lax.scan.
+
+    Memory is O(Sq * block_k) instead of O(Sq * Skv); the scan body is
+    rematerialised in backward, so training memory stays bounded too.
+    NOTE for cost accounting: the kv loop hides (nk-1)/nk of the attention
+    FLOPs from cost_analysis; the roofline pipeline adds them back
+    analytically (roofline.analysis.attention_analytic).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    nk = -(-Skv // block_k)
+    pad = nk * block_k - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, group, hd)
+    ks = k.reshape(B, nk, block_k, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, block_k, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = (Skv - Sq) + jnp.arange(Sq)  # suffix-aligned (decode convention)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        idx, kb, vb = xs
+        s = jnp.einsum(
+            "bqngd,bknd->bqngk", qf, kb.astype(jnp.float32)
+        )  # [B,Sq,Hkv,group,bk]
+        kpos = idx * block_k + jnp.arange(block_k)
+        valid = kpos[None, :] < Skv
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, :, None, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqngk,bknd->bqngd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (jnp.arange(nk), ks, vs),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def self_attention(
+    params,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [B, S]
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # ([B,Smax,Hkv,hd] x2)
+    cache_index: Optional[jax.Array] = None,  # scalar: write offset
+    impl: str = "xla",
+    block_k: int = 0,
+    ac=None,  # sharding-constraint callback (seq-parallel scores)
+    bf16_probs: bool = False,
+):
+    """Returns (out [B,S,d], new_kv_cache)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(C.linear(params["wq"], x), H, hd)
+    k = _split_heads(C.linear(params["wk"], x), Hkv, hd)
+    v = _split_heads(C.linear(params["wv"], x), Hkv, hd)
+    if use_rope:
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = (ck, cv)
+        # Static cache shape; validity expressed via absolute-position mask.
+        out = _attend_with_cache(q, ck, cv, cache_index + S, impl=impl, cfg=cfg)
+        return C.linear(params["wo"], out.reshape(B, S, H * hd)), new_cache
+
+    if block_k and S > block_k and impl == "xla":
+        out = blocked_attention(q, k, v, block_k=block_k, causal=causal)
+    else:
+        out = attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=causal,
+            impl=impl,
+            ac=ac,
+            bf16_probs=bf16_probs,
+        ).transpose(0, 2, 1, 3)
+    return C.linear(params["wo"], out.reshape(B, S, H * hd)), new_cache
+
+
+def _attend_with_cache(q, ck, cv, valid_len, *, impl, cfg):
+    """Decode-style attention over a static-size cache with masking.
+
+    q: [B, S, H, hd] (S = tokens being appended, usually 1)
+    ck/cv: [B, Smax, Hkv, hd]; positions < valid_len are valid.
+    """
+    B, S, H, hd = q.shape
+    Smax, Hkv = ck.shape[1], ck.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, group, hd)
+    kf = ck.astype(jnp.float32)
+    s = jnp.einsum("bsngd,bknd->bsngk", qf, kf) * (hd ** -0.5)
+    kpos = jnp.arange(Smax)
+    qpos = valid_len - S + jnp.arange(S)
+    mask = kpos[None, :] <= qpos[:, None]  # [S, Smax]
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bsngk,bknd->bsngd", p, cv.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def cross_attention(
+    params,
+    x: jax.Array,  # [B, S, d] decoder states
+    memory: jax.Array,  # [B, T, d] encoder output
+    cfg: ModelConfig,
+    *,
+    impl: str = "xla",
+    ac=None,
+    bf16_probs: bool = False,
+):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(C.linear(params["wq"], x), H, hd)
+    k = _split_heads(C.linear(params["wk"], memory), Hkv, hd)
+    v = _split_heads(C.linear(params["wv"], memory), Hkv, hd)
+    out = attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=False,
+        impl=impl,
+        ac=ac,
+        bf16_probs=bf16_probs,
+    ).transpose(0, 2, 1, 3)
+    return C.linear(params["wo"], out.reshape(B, S, H * hd))

@@ -1,0 +1,144 @@
+"""Shared model components: norms, RoPE, embeddings, init, logical sharding.
+
+Parameters are plain pytrees of jnp arrays.  Every init function has a
+mirror ``*_specs`` producing the same tree structure with *logical axis*
+tuples instead of arrays; ``repro.distributed.sharding`` maps logical axes
+to mesh axes.  Tests assert the two trees are always congruent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+# Logical axis names used across the model zoo:
+#   "embed"  : d_model dims            -> FSDP axis (data, pod)
+#   "qkv"    : flattened head dims     -> TP axis (model)
+#   "mlp"    : d_ff dims               -> TP axis (model)
+#   "vocab"  : vocabulary dim          -> TP axis (model)
+#   "expert" : MoE expert dim          -> TP axis (model) (expert parallel)
+#   "inner"  : SSM inner dims          -> TP axis (model)
+#   "layers" : stacked scan groups     -> replicated
+#   None     : replicated
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * np.sqrt(1.0 / max(fan_in, 1))
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_specs() -> Params:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_specs() -> Params:
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, D/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ------------------------------------------------------------------- linear
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False) -> Params:
+    p = {"w": he_init(key, (d_in, d_out), d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear_specs(ax_in: Optional[str], ax_out: Optional[str], *, bias: bool = False):
+    p = {"w": (ax_in, ax_out)}
+    if bias:
+        p["b"] = (ax_out,)
+    return p
+
+
+def linear(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embedding_specs() -> Params:
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params: Params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+# ------------------------------------------------------------ tree utilities
+def tree_congruent(params, specs) -> bool:
+    """Same structure: params tree (array leaves) vs specs tree (tuple leaves)."""
+    tp = jax.tree_util.tree_structure(params)
+    ts = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return tp == ts
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,52 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen/yi), GeGLU (gemma), GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+from . import common as C
+
+
+def mlp_init(key, d: int, ff: int, mlp_type: str):
+    ks = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": C.linear_init(ks[0], d, ff),
+            "wu": C.linear_init(ks[1], d, ff),
+            "wd": C.linear_init(ks[2], ff, d),
+        }
+    return {  # plain gelu
+        "wu": C.linear_init(ks[0], d, ff, bias=True),
+        "wd": C.linear_init(ks[1], ff, d, bias=True),
+    }
+
+
+def mlp_specs(mlp_type: str):
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": C.linear_specs("embed", "mlp"),
+            "wu": C.linear_specs("embed", "mlp"),
+            "wd": C.linear_specs("mlp", "embed"),
+        }
+    return {
+        "wu": C.linear_specs("embed", "mlp", bias=True),
+        "wd": C.linear_specs("mlp", "embed", bias=True),
+    }
+
+
+def mlp(params, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        return C.linear(
+            params["wd"],
+            jax.nn.silu(C.linear(params["wg"], x)) * C.linear(params["wu"], x),
+        )
+    if mlp_type == "geglu":
+        return C.linear(
+            params["wd"],
+            jax.nn.gelu(C.linear(params["wg"], x), approximate=True)
+            * C.linear(params["wu"], x),
+        )
+    return C.linear(params["wd"], jax.nn.gelu(C.linear(params["wu"], x)))

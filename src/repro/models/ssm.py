@@ -1,0 +1,406 @@
+"""State-space / recurrent mixers: SSD (Mamba-2 style) and xLSTM blocks.
+
+Hardware adaptation (DESIGN.md §2, §7): Jamba ships a Mamba-1 selective
+scan (CUDA kernel, per-channel A, sequential in time).  The TPU-native
+formulation is the **chunked SSD form** (Dao & Gu 2024): within a chunk the
+recurrence is evaluated as causal-masked matmuls (MXU work, fully visible
+to cost analysis); across chunks a tiny associative scan carries the
+[N, P] state.  Same asymptotic class, matmul-dominated — this is what a
+production TPU Mamba runs, so we implement SSD and note the substitution.
+
+xLSTM's mLSTM is the same algebra (matrix memory + scalar gates), so it
+reuses the chunked core with sigmoid forget/input gates and a normalizer
+row obtained by appending a ones-column to V.  sLSTM is a genuinely
+sequential scalar recurrence; it is implemented as a time-step scan (its
+FLOPs are elementwise and negligible next to the matmul blocks; noted for
+roofline accounting).
+
+One shared primitive:
+
+    y_t = q_t . h_t        h_t = a_t * h_{t-1} + s_t * (k_t v_t^T)
+
+with per-head scalar decay ``a_t`` and input scale ``s_t``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+
+from . import common as C
+
+
+# ----------------------------------------------------------- chunked core
+def chunked_linear_rnn(
+    q: jax.Array,  # [B, S, H, N]
+    k: jax.Array,  # [B, S, H, N]
+    v: jax.Array,  # [B, S, H, P]
+    log_decay: jax.Array,  # [B, S, H]  (log a_t, <= 0)
+    in_scale: jax.Array,  # [B, S, H]  (s_t)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # [B, H, N, P]
+    ac=None,  # sharding-constraint callback: ac(x, *logical_axes)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], h_final [B,H,N,P])."""
+    if ac is None:
+        ac = lambda x, *axes: x
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    if S % chunk:
+        # Pad to a chunk multiple with inert steps: decay=1 (log 0) and
+        # in_scale=0 leave the state untouched; padded outputs are dropped.
+        pad = chunk - S % chunk
+        padf = lambda a, val=0.0: jnp.pad(
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+            constant_values=val,
+        )
+        y, h = chunked_linear_rnn(
+            padf(q), padf(k), padf(v), padf(log_decay), padf(in_scale),
+            chunk, h0, ac,
+        )
+        return y[:, :S], h
+    nc, Q = S // chunk, chunk
+    f32 = jnp.float32
+
+    # All big intermediates carry an explicit heads->TP constraint: without
+    # it GSPMD can leave the [B,nc,H,Q,Q] / [B,nc,H,N,P] tensors replicated
+    # (measured: 23.5 GiB/dev forward on jamba train_4k, 1.5 GiB with).
+    qc = ac(q.reshape(B, nc, Q, H, N).astype(f32), "batch", None, None, "heads", None)
+    kc = ac(k.reshape(B, nc, Q, H, N).astype(f32), "batch", None, None, "heads", None)
+    vc = ac(v.reshape(B, nc, Q, H, P).astype(f32), "batch", None, None, "heads", None)
+    ld = log_decay.reshape(B, nc, Q, H).astype(f32)
+    sc = in_scale.reshape(B, nc, Q, H).astype(f32)
+
+    L = jnp.cumsum(ld, axis=2)  # [B,nc,Q,H] inclusive within-chunk log decay
+
+    # ---- intra-chunk: causal masked matmuls (the MXU-dominant part)
+    smat = jnp.einsum("bcqhn,bcjhn->bchqj", qc, kc)  # [B,nc,H,Q,Q]
+    smat = ac(smat, "batch", None, "heads", None, None)
+    dl = L[:, :, :, None, :] - L[:, :, None, :, :]  # [B,nc,Q(i),Q(j),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    gamma = jnp.where(causal[None, None, :, :, None], jnp.exp(dl), 0.0)
+    gamma = ac(gamma, "batch", None, None, None, "heads")
+    w = (
+        smat
+        * gamma.transpose(0, 1, 4, 2, 3)  # [B,nc,H,Q,Q]
+        * sc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # s_j on the j axis
+    )
+    y_intra = jnp.einsum("bchqj,bcjhp->bcqhp", w, vc)
+
+    # ---- per-chunk input state + decay to the chunk end
+    to_end = jnp.exp(L[:, :, -1:, :] - L)  # [B,nc,Q,H]
+    u = jnp.einsum("bcjhn,bcjhp->bchnp", kc * (sc * to_end)[..., None], vc)
+    u = ac(u, "batch", None, "heads", None, None)
+    alpha = jnp.exp(L[:, :, -1, :])  # [B,nc,H]
+
+    # ---- inter-chunk associative scan (state carry, small)
+    def comb(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a2 * a1, a2[..., None, None] * u1 + u2
+
+    a_in, u_in = alpha, u
+    if h0 is not None:
+        u_in = u_in.at[:, 0].add(alpha[:, 0, :, None, None] * h0.astype(f32))
+    a_sc, h_after = jax.lax.associative_scan(comb, (a_in, u_in), axis=1)
+    h_after = ac(h_after, "batch", None, "heads", None, None)
+    h_start = jnp.concatenate(
+        [jnp.zeros_like(h_after[:, :1]), h_after[:, :-1]], axis=1
+    )
+    if h0 is not None:
+        h_start = h_start.at[:, 0].set(h0.astype(f32))
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp", qc * jnp.exp(L)[..., None], h_start
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(v.dtype), h_after[:, -1].astype(f32)
+
+
+def linear_rnn_step(
+    q, k, v, log_decay, in_scale, h,  # q/k [B,H,N], v [B,H,P], scalars [B,H]
+):
+    """Single decode step of the same recurrence."""
+    f32 = jnp.float32
+    a = jnp.exp(log_decay.astype(f32))[..., None, None]
+    h = a * h + (in_scale.astype(f32))[..., None, None] * jnp.einsum(
+        "bhn,bhp->bhnp", k.astype(f32), v.astype(f32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), h)
+    return y.astype(v.dtype), h
+
+
+# ------------------------------------------------------------- SSD block
+def ssd_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    return {
+        "in_proj": C.linear_init(ks[0], d, 2 * di),  # -> (x, z gate)
+        "conv_w": C.he_init(ks[1], (4, di), 4),  # causal depthwise conv
+        "bc_proj": C.linear_init(ks[2], d, 2 * N),  # shared B, C (1 group)
+        "dt_proj": C.linear_init(ks[3], d, H),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": C.linear_init(ks[4], di, d),
+    }
+
+
+def ssd_specs(cfg: ModelConfig):
+    return {
+        "in_proj": C.linear_specs("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "bc_proj": C.linear_specs("embed", None),
+        "dt_proj": C.linear_specs("embed", None),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "out_proj": C.linear_specs("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv, kernel 4.  x: [B,S,di]; state: [B,3,di]."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], w.shape[0] - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+        for i in range(w.shape[0])
+    )
+    new_state = xp[:, -(w.shape[0] - 1) :]
+    return out, new_state
+
+
+def ssd_block(
+    params,
+    x: jax.Array,  # [B,S,d]
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    state: Optional[dict] = None,  # decode: {"h": [B,H,N,P], "conv": [B,3,di]}
+):
+    B, S, d = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+    xz = C.linear(params["in_proj"], x)  # [B,S,2di]
+    xz = ctx.ac(xz, "batch", None, "inner")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xin, new_conv = _causal_conv(xin, params["conv_w"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    bc = C.linear(params["bc_proj"], x).astype(jnp.float32)  # [B,S,2N]
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        C.linear(params["dt_proj"], x).astype(jnp.float32) + params["dt_bias"]
+    )  # [B,S,H]
+    a = -jnp.exp(params["a_log"])  # [H]
+    log_decay = dt * a  # [B,S,H]
+
+    xh = xin.reshape(B, S, H, P)
+    v = xh * dt[..., None].astype(xh.dtype)  # fold dt into input
+    qN = jnp.broadcast_to(c_t[:, :, None, :], (B, S, H, N))
+    kN = jnp.broadcast_to(b_t[:, :, None, :], (B, S, H, N))
+
+    if state is None:
+        y, h_final = chunked_linear_rnn(
+            qN, kN, v, log_decay, jnp.ones_like(log_decay), cfg.ssm_chunk,
+            ac=ctx.ac,
+        )
+        new_state = {"h": h_final, "conv": new_conv}
+    else:
+        yv, h = linear_rnn_step(
+            qN[:, 0], kN[:, 0], v[:, 0], log_decay[:, 0],
+            jnp.ones_like(log_decay[:, 0]), state["h"],
+        )
+        y = yv[:, None]
+        new_state = {"h": h, "conv": new_conv}
+
+    y = y + xh * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    out = C.linear(params["out_proj"], y)
+    return out, new_state
+
+
+def ssd_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+    return {
+        "h": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+# ------------------------------------------------------------ mLSTM block
+def mlstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    return {
+        "in_proj": C.linear_init(ks[0], d, 2 * di),  # -> (x, z gate)
+        "conv_w": C.he_init(ks[1], (4, di), 4),
+        "wq": C.linear_init(ks[2], di, di),
+        "wk": C.linear_init(ks[3], di, di),
+        "wv": C.linear_init(ks[4], di, di),
+        "w_if": C.linear_init(ks[5], di, 2 * H, bias=True),  # input/forget gates
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": C.linear_init(ks[6], di, d),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig):
+    return {
+        "in_proj": C.linear_specs("embed", "inner"),
+        "conv_w": (None, "inner"),
+        # [di, di] square projections: shard the OUTPUT dim only (mapping
+        # both dims to the TP axis would be a duplicate-axis spec)
+        "wq": C.linear_specs(None, "inner"),
+        "wk": C.linear_specs(None, "inner"),
+        "wv": C.linear_specs(None, "inner"),
+        "w_if": C.linear_specs("inner", None, bias=True),
+        "gn_scale": ("inner",),
+        "out_proj": C.linear_specs("inner", "embed"),
+    }
+
+
+def _headwise_rms(x: jax.Array, scale: jax.Array, H: int) -> jax.Array:
+    """Group norm over each head's channels (xLSTM uses GN post-cell)."""
+    B, S, di = x.shape
+    xh = x.reshape(B, S, H, di // H).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(B, S, di) * scale).astype(x.dtype)
+
+
+def mlstm_block(
+    params, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+    state: Optional[dict] = None,
+):
+    B, S, d = x.shape
+    di = cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    xz = C.linear(params["in_proj"], x)
+    xz = ctx.ac(xz, "batch", None, "inner")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = C.linear(params["wq"], xc).reshape(B, S, H, P) * (P ** -0.5)
+    k = C.linear(params["wk"], xc).reshape(B, S, H, P)
+    v = C.linear(params["wv"], xin).reshape(B, S, H, P)
+    gates = C.linear(params["w_if"], xc).astype(jnp.float32)  # [B,S,2H]
+    i_g = jax.nn.sigmoid(gates[..., :H])
+    f_g = jax.nn.sigmoid(gates[..., H:] + 3.0)  # forget bias -> long memory
+    log_decay = jnp.log(f_g + 1e-9)
+
+    # normalizer: append a ones column to v -> last channel accumulates i*k.q
+    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    if state is None:
+        y_ext, h_final = chunked_linear_rnn(
+            q, k, v_ext, log_decay, i_g, cfg.ssm_chunk, ac=ctx.ac,
+        )
+        new_state = {"h": h_final, "conv": new_conv}
+    else:
+        y1, h = linear_rnn_step(
+            q[:, 0], k[:, 0], v_ext[:, 0], log_decay[:, 0], i_g[:, 0],
+            state["h"],
+        )
+        y_ext = y1[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    num, den = y_ext[..., :P], y_ext[..., P:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = _headwise_rms(y.reshape(B, S, di), params["gn_scale"], H)
+    y = y * jax.nn.silu(z)
+    return C.linear(params["out_proj"], y), new_state
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di = cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    return {
+        "h": jnp.zeros((batch, H, P, P + 1), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+# ------------------------------------------------------------ sLSTM block
+def slstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    return {
+        "in_proj": C.linear_init(ks[0], d, di),
+        "w_gates": C.linear_init(ks[1], di, 4 * di, bias=True),
+        "r_gates": C.he_init(ks[2], (H, P, 4 * P), P),  # block-diag recurrent
+        "out_proj": C.linear_init(ks[3], di, d),
+    }
+
+
+def slstm_specs(cfg: ModelConfig):
+    return {
+        "in_proj": C.linear_specs("embed", "inner"),
+        # square gate projection: shard output dim only (see mlstm_specs)
+        "w_gates": C.linear_specs(None, "inner", bias=True),
+        "r_gates": (None, None, None),
+        "out_proj": C.linear_specs("inner", "embed"),
+    }
+
+
+def slstm_block(
+    params, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx,
+    state: Optional[dict] = None,
+):
+    """Sequential scalar LSTM with per-head recurrence (scan over time).
+
+    FLOPs here are O(S * di * 4P) — small next to the matmul blocks — and
+    the scan body is counted once by cost analysis; noted in EXPERIMENTS.md
+    §Roofline methodology.
+    """
+    B, S, d = x.shape
+    di = cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    xin = C.linear(params["in_proj"], x)
+    gates_x = C.linear(params["w_gates"], xin).astype(jnp.float32)  # [B,S,4di]
+
+    def step(carry, gx):
+        h, c = carry  # [B,H,P] each
+        rec = jnp.einsum("bhp,hpq->bhq", h, params["r_gates"])  # [B,H,4P]
+        g = gx.reshape(B, H, 4 * P) + rec
+        i_g, f_g, z_g, o_g = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f_g + 1.0) * c + jax.nn.sigmoid(i_g) * jnp.tanh(z_g)
+        h = jax.nn.sigmoid(o_g) * jnp.tanh(c)
+        return (h, c), h
+
+    if state is None:
+        h0 = jnp.zeros((B, H, P), jnp.float32)
+        c0 = jnp.zeros((B, H, P), jnp.float32)
+    else:
+        h0, c0 = state["h"], state["c"]
+    (hT, cT), ys = jax.lax.scan(step, (h0, c0), gates_x.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
+    new_state = {"h": hT, "c": cT}
+    return C.linear(params["out_proj"], y), new_state
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di = cfg.d_inner
+    H = cfg.num_heads
+    P = di // H
+    return {
+        "h": jnp.zeros((batch, H, P), jnp.float32),
+        "c": jnp.zeros((batch, H, P), jnp.float32),
+    }

@@ -1,0 +1,313 @@
+"""Decoder assembly: heterogeneous blocks, scan-over-groups, KV/SSM caches.
+
+All ten architectures are assembled from the same machinery:
+
+- ``cfg.layer_kind(i)`` decides each layer's mixer (attn / ssd / mlstm /
+  slstm) and MLP (dense / moe / none).  Layer kinds repeat with period
+  ``cfg.group_period`` (1 for homogeneous stacks, 8 for Jamba, 4 for
+  xLSTM), so parameters stack as [num_groups, ...] pytrees and the layer
+  stack runs as ONE ``lax.scan`` over groups — O(1) HLO size regardless of
+  depth, which keeps the 80-cell dry-run compile matrix fast.  Roofline
+  accounting multiplies scan-body costs back up (EXPERIMENTS.md §Roofline
+  methodology).
+- Three modes: ``train`` (no caches, remat per group), ``prefill``
+  (returns per-layer caches), ``decode`` (consumes + updates caches,
+  static cache shapes, position-masked attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+
+from . import common as C
+from . import moe as MOE
+from . import ssm as SSM
+from .attention import attn_init, attn_specs, cross_attention, self_attention
+from .mlp import mlp, mlp_init, mlp_specs
+
+
+# ------------------------------------------------------------- one block
+def block_init(key, cfg: ModelConfig, layer_in_group: int):
+    mixer, mlp_kind = cfg.layer_kind(layer_in_group)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": C.rmsnorm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attn_init(ks[0], cfg)
+        if cfg.encdec:
+            p["ln_x"] = C.rmsnorm_init(cfg.d_model)
+            p["xattn"] = attn_init(ks[2], cfg, cross=True)
+    elif mixer == "ssd":
+        p["ssd"] = SSM.ssd_init(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = SSM.mlstm_init(ks[0], cfg)
+    elif mixer == "slstm":
+        p["slstm"] = SSM.slstm_init(ks[0], cfg)
+    if mlp_kind == "dense":
+        ff = cfg.dense_d_ff or cfg.d_ff
+        p["ln2"] = C.rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, ff, cfg.mlp_type)
+    elif mlp_kind == "moe":
+        p["ln2"] = C.rmsnorm_init(cfg.d_model)
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    return p
+
+
+def block_specs(cfg: ModelConfig, layer_in_group: int):
+    mixer, mlp_kind = cfg.layer_kind(layer_in_group)
+    p: Dict[str, Any] = {"ln1": C.rmsnorm_specs()}
+    if mixer == "attn":
+        p["attn"] = attn_specs(cfg)
+        if cfg.encdec:
+            p["ln_x"] = C.rmsnorm_specs()
+            p["xattn"] = attn_specs(cfg)
+    elif mixer == "ssd":
+        p["ssd"] = SSM.ssd_specs(cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = SSM.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        p["slstm"] = SSM.slstm_specs(cfg)
+    if mlp_kind == "dense":
+        p["ln2"] = C.rmsnorm_specs()
+        p["mlp"] = mlp_specs(cfg.mlp_type)
+    elif mlp_kind == "moe":
+        p["ln2"] = C.rmsnorm_specs()
+        p["moe"] = MOE.moe_specs(cfg)
+    return p
+
+
+def block_cache_init(
+    cfg: ModelConfig, layer_in_group: int, batch: int, max_seq: int,
+    dtype=jnp.bfloat16,
+):
+    """Static-shape cache for one block (decode mode)."""
+    mixer, _ = cfg.layer_kind(layer_in_group)
+    if mixer == "attn":
+        kv = lambda: jnp.zeros(
+            (batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype
+        )
+        return {"k": kv(), "v": kv()}
+    if mixer == "ssd":
+        return SSM.ssd_state_init(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return SSM.mlstm_state_init(cfg, batch, dtype)
+    if mixer == "slstm":
+        return SSM.slstm_state_init(cfg, batch, dtype)
+    return {}
+
+
+def block_apply(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    layer_in_group: int,
+    *,
+    mode: str,  # train | prefill | decode
+    cache=None,
+    cache_index=None,
+    memory: Optional[jax.Array] = None,  # enc-dec cross-attention memory
+):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, mlp_kind = cfg.layer_kind(layer_in_group)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = C.rmsnorm(params["ln1"], x, cfg.norm_eps)
+
+    if mixer == "attn":
+        if mode == "decode":
+            out, kvc = self_attention(
+                params["attn"], h, positions, cfg,
+                kv_cache=(cache["k"], cache["v"]), cache_index=cache_index,
+                impl=ctx.attn_impl,
+            )
+            new_cache = {"k": kvc[0], "v": kvc[1]}
+        else:
+            out, _ = self_attention(
+                params["attn"], h, positions, cfg, impl=ctx.attn_impl,
+                block_k=ctx.attn_block_k,
+                ac=ctx.ac if ctx.attn_seq_shard else None,
+                bf16_probs=ctx.attn_bf16_probs,
+            )
+            if mode == "prefill":
+                # cache = computed K/V, written densely at positions 0..S
+                kc = C.linear(params["attn"]["wk"], h)
+                vc = C.linear(params["attn"]["wv"], h)
+                B, S, _ = h.shape
+                kh = kc.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+                kh = C.apply_rope(kh, positions, cfg.rope_theta)
+                vh = vc.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+                new_cache = {"k": kh, "v": vh}
+        x = x + out
+        if cfg.encdec and memory is not None:
+            hx = C.rmsnorm(params["ln_x"], x, cfg.norm_eps)
+            x = x + cross_attention(params["xattn"], hx, memory, cfg,
+                                    impl=ctx.attn_impl,
+                                    ac=ctx.ac if ctx.attn_seq_shard else None,
+                                    bf16_probs=ctx.attn_bf16_probs)
+    elif mixer == "ssd":
+        out, st = SSM.ssd_block(
+            params["ssd"], h, cfg, ctx,
+            state=cache if mode == "decode" else None,
+        )
+        if mode != "train":
+            new_cache = st
+        x = x + out
+    elif mixer == "mlstm":
+        out, st = SSM.mlstm_block(
+            params["mlstm"], h, cfg, ctx,
+            state=cache if mode == "decode" else None,
+        )
+        if mode != "train":
+            new_cache = st
+        x = x + out
+    elif mixer == "slstm":
+        out, st = SSM.slstm_block(
+            params["slstm"], h, cfg, ctx,
+            state=cache if mode == "decode" else None,
+        )
+        if mode != "train":
+            new_cache = st
+        x = x + out
+
+    if mlp_kind == "dense":
+        h2 = C.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2, cfg.mlp_type)
+    elif mlp_kind == "moe":
+        h2 = C.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, aux = MOE.moe_ffn(params["moe"], h2, cfg, ctx)
+        x = x + y
+    x = ctx.ac(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ group stack
+def group_init(key, cfg: ModelConfig):
+    period = cfg.group_period
+    ks = jax.random.split(key, period)
+    return {f"layer_{j}": block_init(ks[j], cfg, j) for j in range(period)}
+
+
+def group_specs(cfg: ModelConfig):
+    period = cfg.group_period
+    return {f"layer_{j}": block_specs(cfg, j) for j in range(period)}
+
+
+def stacked_group_init(key, cfg: ModelConfig):
+    """Params for all groups, stacked on axis 0: leaves [num_groups, ...]."""
+    ks = jax.random.split(key, cfg.num_groups)
+    return jax.vmap(lambda k: group_init(k, cfg))(ks)
+
+
+def stacked_group_specs(cfg: ModelConfig):
+    g = group_specs(cfg)
+    return jax.tree_util.tree_map(
+        lambda spec: ("layers",) + spec, g,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def group_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    period = cfg.group_period
+    return {
+        f"layer_{j}": block_cache_init(cfg, j, batch, max_seq, dtype)
+        for j in range(period)
+    }
+
+
+def stacked_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    one = group_cache_init(cfg, batch, max_seq, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_groups,) + x.shape), one
+    )
+
+
+def _block_cache_specs(cfg: ModelConfig, layer_in_group: int):
+    """Logical axes for one block's decode cache (mirrors block_cache_init)."""
+    mixer, _ = cfg.layer_kind(layer_in_group)
+    if mixer == "attn":
+        kv = ("layers", "batch", "kvseq", "heads_kv", None)
+        return {"k": kv, "v": kv}
+    if mixer == "ssd":
+        return {
+            "h": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "inner"),
+        }
+    if mixer == "mlstm":
+        return {
+            "h": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "inner"),
+        }
+    if mixer == "slstm":
+        return {
+            "h": ("layers", "batch", "heads", None),
+            "c": ("layers", "batch", "heads", None),
+        }
+    return {}
+
+
+def stacked_cache_specs(cfg: ModelConfig):
+    return {
+        f"layer_{j}": _block_cache_specs(cfg, j)
+        for j in range(cfg.group_period)
+    }
+
+
+def run_stack(
+    stacked_params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    *,
+    mode: str,
+    caches=None,  # stacked [G, ...] pytree (prefill: None in, built out)
+    cache_index=None,
+    memory: Optional[jax.Array] = None,
+    remat: bool = True,
+):
+    """Scan the group stack.  Returns (x, new_caches, aux_total)."""
+    period = cfg.group_period
+
+    use_remat = remat and mode == "train"
+
+    def one_layer(j, gparams_j, xc, gcache_j):
+        return block_apply(
+            gparams_j, xc, positions, cfg, ctx, j,
+            mode=mode, cache=gcache_j, cache_index=cache_index,
+            memory=memory,
+        )
+
+    def group_body(carry, xs):
+        xc, aux_acc = carry
+        gparams, gcache = xs
+        new_gcache = {}
+        for j in range(period):
+            name = f"layer_{j}"
+            layer_fn = functools.partial(one_layer, j)
+            if use_remat and period > 1:
+                # nested remat: backward recomputes ONE layer at a time, not
+                # the whole group (a group of 8 jamba layers held ~50 GiB of
+                # recomputed activations live without this)
+                layer_fn = jax.checkpoint(layer_fn)
+            xc, nc, aux = layer_fn(
+                gparams[name], xc,
+                None if gcache is None else gcache[name],
+            )
+            new_gcache[name] = nc
+        return (xc, aux_acc + aux), new_gcache
+
+    body = group_body
+    if use_remat:
+        body = jax.checkpoint(group_body)
+
+    xs = (stacked_params, caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux

@@ -1,0 +1,264 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / (ICI_LINKS * ICI_BW_PER_LINK)
+
+Sources:
+- ``compiled.cost_analysis()`` provides per-device FLOPs and bytes of the
+  PARTITIONED module (measured: GSPMD-partitioned modules report the
+  per-participant cost).
+- collective bytes come from parsing ``compiled.as_text()``: we sum the
+  wire-relevant operand size of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute op (shapes in optimized
+  HLO are already the per-device shard shapes).
+
+**Scan correction** (methodology): ``lax.scan`` bodies appear ONCE in HLO,
+so both cost_analysis and a naive text parse undercount by the trip count.
+We correct exactly: compile the model AND an outer-only (0-layer) variant —
+``corrected = (full - outer) * trips + outer`` — and multiply collectives
+found inside while-loop body computations by the trip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in a (possibly tuple) type."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> op lines (optimized HLO text)."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and ("{" in line) and ("(" in line):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None and stripped and stripped != "}":
+            comps[cur].append(stripped)
+        if not line.startswith(" ") and stripped == "}":
+            cur = None
+    return comps
+
+
+def _while_body_names(comps: Dict[str, List[str]]) -> List[str]:
+    bodies = []
+    for lines in comps.values():
+        for ln in lines:
+            if " while(" in ln or "= while(" in ln:
+                m = re.search(r"body=%?([\w\.\-]+)", ln)
+                if m:
+                    bodies.append(m.group(1))
+    return bodies
+
+
+def parse_collectives(hlo: str, loop_trips: int = 1) -> CollectiveStats:
+    """Sum collective wire bytes; ops inside while bodies count loop_trips x.
+
+    Wire convention per op kind (documented, consistent across cells):
+      all-gather:        output bytes (what lands on each device)
+      all-reduce:        output bytes
+      reduce-scatter:    input bytes (what leaves each device)
+      all-to-all:        output bytes
+      collective-permute: output bytes
+    """
+    comps = _split_computations(hlo)
+    bodies = set(_while_body_names(comps))
+    bytes_by: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+
+    for name, lines in comps.items():
+        mult = loop_trips if name in bodies else 1
+        for ln in lines:
+            for kind in COLLECTIVES:
+                # match the op, not tuple types: " all-gather(" etc.
+                if f" {kind}(" in ln or f"{kind}-start(" in ln:
+                    if kind == "reduce-scatter":
+                        # input operand shapes appear inside the parens;
+                        # fall back to output if none parse.
+                        m = re.search(r"{}\((.*)\)".format(kind), ln)
+                        size = _shape_bytes(ln.split("=")[0])
+                        # output of reduce-scatter is 1/N of input: input =
+                        # output * group size; approximate with output if
+                        # operand text has no shapes (HLO refs are %names).
+                        bytes_by[kind] += size * mult
+                    else:
+                        size = _shape_bytes(ln.split(f" {kind}")[0])
+                        bytes_by[kind] += size * mult
+                    count_by[kind] += 1
+                    break
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective_bytes_per_dev: float
+    n_chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_dev / (hw.ICI_BW_PER_LINK * hw.ICI_LINKS)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound (sum) — conservative."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def step_time_overlap_s(self) -> float:
+        """Perfect-overlap lower bound (max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "collective_bytes_per_dev": self.collective_bytes_per_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "n_chips": self.n_chips,
+        }
+
+
+def corrected_terms(
+    full_cost: Dict, outer_cost: Dict,
+    full_hlo: str, trips: int, n_chips: int,
+    extra_scans: Optional[List[Tuple[Dict, int]]] = None,
+) -> RooflineTerms:
+    """Apply the scan correction to cost_analysis numbers + HLO collectives.
+
+    ``extra_scans``: [(cost_of_variant_without_that_scan, its_trips)]
+    handles multi-scan models (whisper enc+dec) by telescoping subtraction;
+    for the common single-scan case pass None.
+    """
+    def get(d, k):
+        return float(d.get(k, 0.0) or 0.0)
+
+    f_full, f_outer = get(full_cost, "flops"), get(outer_cost, "flops")
+    b_full, b_outer = (
+        get(full_cost, "bytes accessed"), get(outer_cost, "bytes accessed"),
+    )
+    flops = (f_full - f_outer) * trips + f_outer
+    byts = (b_full - b_outer) * trips + b_outer
+    if extra_scans:
+        for mid_cost, mid_trips in extra_scans:
+            # contribution already included once at trips x; adjust the
+            # difference between full and mid to mid_trips instead.
+            df = get(full_cost, "flops") - get(mid_cost, "flops")
+            db = get(full_cost, "bytes accessed") - get(mid_cost, "bytes accessed")
+            flops += df * (mid_trips - trips)
+            byts += db * (mid_trips - trips)
+
+    col = parse_collectives(full_hlo, loop_trips=trips)
+    return RooflineTerms(
+        flops_per_dev=flops,
+        bytes_per_dev=byts,
+        collective_bytes_per_dev=float(col.total_bytes),
+        n_chips=n_chips,
+    )
+
+
+def attention_analytic(cfg, shape, mode: str) -> Tuple[float, float]:
+    """Global (flops, bytes) of causal self-attention einsums.
+
+    Used ONLY when the kv-blocked attention path is active (long-sequence
+    prefill): the lax.scan over kv blocks hides (nk-1)/nk of these FLOPs
+    from cost_analysis, so the roofline pipeline adds the analytic total
+    (and drops the 1/nk double count, which is <4% and conservative).
+
+    fwd flops per layer = 4 * B * H * pairs * head_dim  (QK^T + AV);
+    train multiplies by 4 (forward + remat re-forward + 2x backward).
+    """
+    S, B = shape.seq_len, shape.global_batch
+    H, hd = cfg.num_heads, cfg.head_dim
+    n_attn = sum(
+        1 for i in range(cfg.num_layers) if cfg.layer_kind(i)[0] == "attn"
+    )
+    pairs = S * (S + 1) / 2  # causal
+    mult = 4.0 if mode == "train" else 1.0
+    flops = 4.0 * B * H * pairs * hd * n_attn * mult
+    # bytes: q/k/v/o streamed once per layer (blocked path keeps q resident)
+    byts = B * S * hd * (2 * H + 2 * cfg.num_kv_heads) * 2 * n_attn * mult
+    return flops, byts
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D forward (N = active params).
+
+    For decode, D = tokens processed per step (= global_batch)."""
+    n = cfg.active_param_count
+    if mode == "train":
+        d = shape.seq_len * shape.global_batch
+        return 6.0 * n * d
+    if mode == "prefill":
+        d = shape.seq_len * shape.global_batch
+        return 2.0 * n * d
+    d = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,19 @@
+"""TPU v5e hardware constants (the TARGET platform; CPU is the dev host)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9  # bytes/s per chip
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip
+ICI_BW_PER_LINK = 50e9  # bytes/s per link (~) — in-pod torus links
+ICI_LINKS = 4  # v5e: 4 links per chip (2D torus x2 dirs)
+DCN_BW = 6.25e9  # bytes/s per host cross-pod (conservative 50 Gb/s)
+VMEM_BYTES = 128 * 2**20  # ~128MB vector memory per chip
+
+CHIPS_PER_POD = 256  # 16 x 16
+
+
+def chips(mesh_shape) -> int:
+    n = 1
+    for s in mesh_shape:
+        n *= s
+    return n

@@ -1,0 +1,143 @@
+"""The fault-tolerant training loop.
+
+Wires together: data loader (stateless resume), jit'd train step, async
+sharded checkpointing, preemption guard, straggler monitor.  Used by
+``launch/train.py`` and the end-to-end example; exercised (including the
+crash/restart path) by tests/test_train_loop.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config import ModelConfig
+from repro.data.tokens import DataConfig, add_frontend_stub, make_batch
+from repro.distributed.fault_tolerance import PreemptionGuard, StragglerMonitor
+from repro.distributed.sharding import ShardingCtx
+from repro.models import model as M
+from repro.optim import adamw
+from repro.optim.compression import CompressionConfig, init_error_state
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    microbatches: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    losses: List[float]
+    step_times: List[float]
+    straggler_events: int
+    resumed_from: Optional[int]
+    preempted: bool
+
+
+def train(
+    cfg: ModelConfig,
+    data_cfg: DataConfig,
+    loop_cfg: LoopConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    ctx: Optional[ShardingCtx] = None,
+    checkpoint_dir: Optional[str] = None,
+    compression: Optional[CompressionConfig] = None,
+    preemption: Optional[PreemptionGuard] = None,
+    param_dtype=None,
+) -> LoopResult:
+    import jax.numpy as jnp
+
+    ctx = ctx or ShardingCtx()
+    param_dtype = param_dtype or jnp.float32
+
+    params = M.init_params(jax.random.key(loop_cfg.seed), cfg, dtype=param_dtype)
+    opt_state = adamw.init(params)
+    err_state = init_error_state(params) if compression else None
+
+    ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+    start_step = 0
+    resumed_from = None
+    if ckpt is not None:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            state_like = {"params": params, "m": opt_state.m, "v": opt_state.v}
+            restored = ckpt.restore(latest, state_like)
+            params = restored["params"]
+            opt_state = adamw.AdamWState(
+                step=jnp.asarray(latest, jnp.int32),
+                m=restored["m"], v=restored["v"],
+            )
+            start_step = latest
+            resumed_from = latest
+
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, ctx, opt_cfg,
+            microbatches=loop_cfg.microbatches, compression=compression,
+        )
+    )
+
+    monitor = StragglerMonitor()
+    losses: List[float] = []
+    step_times: List[float] = []
+    preempted = False
+    step = start_step
+
+    while step < loop_cfg.total_steps:
+        monitor.start_step()
+        batch_np = make_batch(data_cfg, step)
+        if cfg.frontend != "none":
+            batch_np = add_frontend_stub(batch_np, cfg, step)
+        batch = jax.tree_util.tree_map(jnp.asarray, batch_np)
+        params, opt_state, err_state, metrics = step_fn(
+            params, opt_state, err_state, batch
+        )
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        step += 1
+        step_times.append(monitor.end_step(step))
+
+        if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+            print(
+                f"step {step:6d}  loss {loss:.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"lr {float(metrics['lr']):.2e}  "
+                f"t {step_times[-1]*1e3:.0f}ms"
+            )
+        want_ckpt = ckpt is not None and (
+            step % loop_cfg.checkpoint_every == 0 or step == loop_cfg.total_steps
+        )
+        if preemption is not None and preemption.preempted:
+            want_ckpt = ckpt is not None
+            preempted = True
+        if want_ckpt:
+            ckpt.save_async(
+                step,
+                {"params": params, "m": opt_state.m, "v": opt_state.v},
+                extra={"loss": loss},
+            )
+        if preempted:
+            break
+
+    if ckpt is not None:
+        ckpt.wait()
+    return LoopResult(
+        final_step=step,
+        losses=losses,
+        step_times=step_times,
+        straggler_events=len(monitor.events),
+        resumed_from=resumed_from,
+        preempted=preempted,
+    )

@@ -1,0 +1,98 @@
+"""train_step / serve_step factories: the functions the dry-run lowers and
+the drivers execute.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, err_state, batch) -> (params', opt', err', metrics)
+with loss+backward+AdamW fused in one jit, optional microbatch gradient
+accumulation (scan over microbatches), and optional gradient compression on
+the pod axis.  ``make_serve_steps`` returns (prefill_fn, decode_fn).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models import model as M
+from repro.optim import adamw
+from repro.optim.compression import CompressionConfig, compress_tree
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compression: Optional[CompressionConfig] = None,
+    pod_axis: Optional[str] = None,
+    accum_dtype=jnp.float32,
+):
+    """Build the jit-able train step.
+
+    ``accum_dtype``: microbatch gradient-accumulator dtype.  f32 is the
+    default; bf16 halves the accumulator HBM at >100B scale (acceptable at
+    small microbatch counts — EXPERIMENTS.md §Perf jamba note)."""
+
+    def loss_fn(params, batch):
+        return M.train_loss(params, batch, cfg, ctx)
+
+    def step(params, opt_state, err_state, batch):
+        if microbatches > 1:
+            # split the batch on the leading axis and scan, accumulating
+            # grads in f32 — memory-bound cells trade HBM for steps.
+            def mb_split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbatch = jax.tree_util.tree_map(mb_split, batch)
+            gz = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+
+            def one(acc, mb):
+                g0, l0 = acc
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g0 = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(accum_dtype), g0, g
+                )
+                return (g0, l0 + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(one, (gz, 0.0), mbatch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads
+            )
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+
+        if compression is not None and compression.kind != "none":
+            # Within-pod reduction already happened inside backward (psum
+            # over 'data' via GSPMD).  Compress only the cross-pod wire.
+            grads, err_state = compress_tree(grads, err_state, compression)
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics, "loss": metrics["loss"]}
+        return params, opt_state, err_state, metrics
+
+    return step
+
+
+def make_serve_steps(cfg: ModelConfig, ctx: ShardingCtx):
+    def prefill_fn(params, batch):
+        return M.prefill(params, batch, cfg, ctx)
+
+    def decode_fn(params, tokens, caches, cache_index):
+        return M.decode_step(params, tokens, caches, cache_index, cfg, ctx)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (spec requirement): a REDUCED config of the
+same family runs one forward/train step on CPU, asserting output shapes and
+no NaNs; plus prefill+decode consistency against the full forward."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import smoke_config
+from repro.distributed.sharding import LOCAL_CTX
+from repro.models import common as C
+from repro.models import model as M
+
+ARCHS = configs.list_archs()
+
+
+def _smoke_batch(cfg, rng, B=2, S=32):
+    tokens = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    labels = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.prefix_len, cfg.d_model)), jnp.float32
+        )
+        batch["labels"] = jnp.asarray(labels)
+    if cfg.encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_params_match_specs_structure(arch):
+    cfg = smoke_config(configs.get_config(arch))
+    params = M.init_params(jax.random.key(0), cfg)
+    specs = M.param_specs(cfg)
+    assert C.tree_congruent(params, specs), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch, rng):
+    cfg = smoke_config(configs.get_config(arch))
+    params = M.init_params(jax.random.key(1), cfg, dtype=jnp.float32)
+    batch = _smoke_batch(cfg, rng)
+
+    logits, _, aux = M.forward(params, batch, cfg, LOCAL_CTX, mode="train")
+    S_out = batch["tokens"].shape[1] + (
+        cfg.prefix_len if cfg.frontend == "vision_stub" else 0
+    )
+    assert logits.shape == (2, S_out, cfg.vocab_size), arch
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+    # one real train step: loss + grads, all finite
+    def loss_fn(p):
+        l, m = M.train_loss(p, batch, cfg, LOCAL_CTX)
+        return l
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), arch
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves), arch
+    # gradients actually flow to the embedding and deep layers
+    gnorm = sum(float(jnp.abs(g).sum()) for g in leaves)
+    assert gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    """decode_step(t) logits must match the full-forward logits at t."""
+    cfg = smoke_config(configs.get_config(arch))
+    params = M.init_params(jax.random.key(2), cfg, dtype=jnp.float32)
+    B, S = 2, 16
+    batch = _smoke_batch(cfg, rng, B=B, S=S)
+    batch.pop("labels")
+
+    full_logits, _, _ = M.forward(params, batch, cfg, LOCAL_CTX, mode="train")
+
+    # prefill on the first S-4 tokens, then decode 4 tokens one by one
+    P0 = S - 4
+    pre_batch = dict(batch, tokens=batch["tokens"][:, :P0])
+    _, caches = M.prefill(params, pre_batch, cfg, LOCAL_CTX)
+    caches = M.pad_caches(caches, cfg, max_seq=S + (
+        cfg.prefix_len if cfg.frontend == "vision_stub" else 0
+    ))
+
+    prefix = cfg.prefix_len if cfg.frontend == "vision_stub" else 0
+    for t in range(P0, S):
+        tok = batch["tokens"][:, t : t + 1]
+        logits, caches = M.decode_step(
+            params, tok, caches, jnp.int32(t + prefix), cfg, LOCAL_CTX
+        )
+        ref = full_logits[:, t + prefix]
+        got = np.asarray(logits, np.float32)
+        refn = np.asarray(ref, np.float32)
+        assert np.allclose(got, refn, rtol=2e-2, atol=2e-2), (
+            arch, t, np.abs(got - refn).max(),
+        )
+
+
+def test_param_counts_in_expected_range():
+    """Published param counts (rough): sanity-check our config wiring."""
+    expect = {
+        "yi-6b": (5.5e9, 7.5e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "gemma-7b": (7.0e9, 10e9),
+        # assigned spec (48L x 64e x ff1408) works out to ~28B total; the hf
+        # model is 27L — we implement the ASSIGNED numbers verbatim.
+        "moonshot-v1-16b-a3b": (26e9, 31e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "jamba-1.5-large-398b": (320e9, 440e9),
+        "xlstm-350m": (0.25e9, 0.55e9),
+        "paligemma-3b": (2.0e9, 3.5e9),  # language tower only (vision stubbed)
+        "whisper-large-v3": (1.2e9, 2.0e9),
+        "qwen2.5-3b": (2.5e9, 4.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_count
+        assert lo < n < hi, (arch, f"{n:.3e}", lo, hi)

@@ -1,0 +1,113 @@
+"""Unit + property tests: Bloom filters and the compressed shard cache."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter, optimal_num_bits
+from repro.core.cache import MODES, ShardCache, select_cache_mode
+
+
+# ------------------------------------------------------------------- bloom
+def test_bloom_no_false_negatives_basic():
+    items = np.array([1, 5, 9, 100, 2**31 - 1])
+    f = BloomFilter.build(items)
+    assert f.contains(items).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), min_size=1, max_size=500),
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), max_size=200),
+)
+def test_bloom_no_false_negatives_property(members, queries):
+    members = np.unique(np.array(members, dtype=np.int64))
+    f = BloomFilter.build(members)
+    # every member must test positive
+    assert f.contains(members).all()
+    # any_member must be True whenever the query overlaps the member set
+    q = np.array(queries, dtype=np.int64)
+    if len(q) and np.isin(q, members).any():
+        assert f.any_member(q)
+
+
+def test_bloom_false_positive_rate_reasonable():
+    rng = np.random.default_rng(0)
+    members = rng.choice(10**7, size=20000, replace=False)
+    f = BloomFilter.build(members, fp_rate=0.01)
+    non_members = np.setdiff1d(rng.choice(10**7, size=30000), members)[:20000]
+    fp = f.contains(non_members).mean()
+    assert fp < 0.05  # target 0.01, generous bound
+    assert f.fp_rate_estimate() < 0.05
+
+
+def test_bloom_empty():
+    f = BloomFilter.build(np.array([], dtype=np.int64))
+    assert not f.any_member(np.array([1, 2, 3]))
+    assert not f.any_member(np.array([], dtype=np.int64))
+
+
+def test_optimal_bits_monotone():
+    assert optimal_num_bits(1000, 0.01) > optimal_num_bits(100, 0.01)
+    assert optimal_num_bits(1000, 0.001) > optimal_num_bits(1000, 0.01)
+    assert optimal_num_bits(64, 0.01) % 64 == 0
+
+
+def test_bloom_device_words_roundtrip():
+    f = BloomFilter.build(np.arange(100))
+    w = f.device_words()
+    assert w.dtype == np.uint32 and w.nbytes == f.bits.nbytes
+
+
+# ------------------------------------------------------------------- cache
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_cache_roundtrip(mode):
+    c = ShardCache(1 << 20, mode=mode)
+    blob = np.arange(1000, dtype=np.int32).tobytes() * 3
+    assert c.put(7, blob)
+    assert c.get(7) == blob
+    assert c.get(8) is None
+    assert c.stats.hits == 1 and c.stats.misses == 1
+
+
+def test_cache_lru_eviction_respects_capacity():
+    c = ShardCache(10_000, mode=1)
+    blobs = {i: bytes(np.random.default_rng(i).integers(0, 255, 4000, np.uint8)) for i in range(5)}
+    for i, b in blobs.items():
+        c.put(i, b)
+    assert c.stored_bytes <= 10_000
+    assert c.stats.evictions > 0
+    # most recently inserted survives
+    assert c.get(4) == blobs[4]
+
+
+def test_cache_compression_saves_space():
+    # compressible payload
+    blob = b"abcd" * 50_000
+    raw = ShardCache(1 << 22, mode=1)
+    zl = ShardCache(1 << 22, mode=3)
+    raw.put(0, blob)
+    zl.put(0, blob)
+    assert zl.stored_bytes < raw.stored_bytes // 5
+    assert zl.get(0) == blob
+    assert zl.stats.compression_ratio > 5
+
+
+def test_cache_mode_selection():
+    compressible = b"xy" * 100_000
+    # capacity far below raw size -> compressed mode should win
+    m = select_cache_mode(compressible, capacity_bytes=60_000,
+                          total_raw_bytes=200_000)
+    assert m in (2, 3, 4)
+    # infinite capacity -> raw wins (no decompress cost)
+    m2 = select_cache_mode(compressible, capacity_bytes=1 << 30,
+                           total_raw_bytes=200_000)
+    assert m2 == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=0, max_size=10_000), st.sampled_from([1, 2, 3, 4]))
+def test_cache_roundtrip_property(blob, mode):
+    c = ShardCache(1 << 20, mode=mode)
+    if c.put(0, blob):
+        assert c.get(0) == blob

@@ -1,0 +1,123 @@
+"""Unit tests: graph container, sharding, CSR, blocked-ELL conversion."""
+
+import numpy as np
+import pytest
+
+from repro.core.csr import csr_to_ell
+from repro.core.graph import (
+    Graph,
+    chain_graph,
+    from_edge_list,
+    rmat_graph,
+    star_graph,
+    uniform_graph,
+)
+from repro.core.sharding import compute_intervals, preprocess
+
+
+def test_graph_basic():
+    g = from_edge_list([(0, 1), (1, 2), (2, 0), (0, 2)])
+    assert g.num_vertices == 3 and g.num_edges == 4
+    assert g.out_degrees().tolist() == [2, 1, 1]
+    assert g.in_degrees().tolist() == [1, 1, 2]
+    g.validate()
+
+
+def test_graph_validate_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        Graph(2, np.array([0, 5]), np.array([1, 0])).validate()
+
+
+def test_generators_shapes():
+    for g in (
+        rmat_graph(100, 1000, seed=1),
+        uniform_graph(100, 1000, seed=1),
+        chain_graph(50),
+        star_graph(50),
+    ):
+        g.validate()
+        assert g.num_edges > 0
+
+
+def test_rmat_is_skewed():
+    g = rmat_graph(1 << 12, 1 << 16, seed=0)
+    ind = g.in_degrees()
+    # power-law-ish: max degree far above average
+    assert ind.max() > 10 * g.avg_degree
+
+
+def test_intervals_balance_edges():
+    g = rmat_graph(2000, 50000, seed=2)
+    ind = g.in_degrees()
+    iv = compute_intervals(ind, num_shards=8)
+    per = [ind[iv[p] : iv[p + 1]].sum() for p in range(len(iv) - 1)]
+    assert sum(per) == g.num_edges
+    # Every shard within 3x of the mean (power-law hubs can exceed target).
+    mean = g.num_edges / (len(iv) - 1)
+    assert max(per) < 3 * mean
+
+
+def test_intervals_edge_cases():
+    ind = np.zeros(10, dtype=np.int64)
+    iv = compute_intervals(ind, num_shards=3)
+    assert iv[0] == 0 and iv[-1] == 10
+    iv = compute_intervals(np.array([5, 0, 0], dtype=np.int64), edges_per_shard=2)
+    assert iv[0] == 0 and iv[-1] == 3
+
+
+def test_preprocess_partitions_every_edge():
+    g = rmat_graph(500, 8000, seed=3)
+    meta, shards = preprocess(g, num_shards=6)
+    assert sum(s.nnz for s in shards) == g.num_edges
+    assert meta.intervals[0] == 0 and meta.intervals[-1] == g.num_vertices
+    # CSR adjacency matches brute force on sampled vertices
+    for s in shards[::2]:
+        for v in range(s.v0, min(s.v0 + 4, s.v1)):
+            ref = np.sort(g.src[g.dst == v])
+            assert np.array_equal(np.sort(s.in_neighbors(v)), ref)
+
+
+@pytest.mark.parametrize("window,k,tr", [(64, 8, 8), (256, 16, 8), (1 << 14, 128, 8)])
+def test_ell_roundtrip_exact_multiset(window, k, tr):
+    g = rmat_graph(300, 4000, seed=4)
+    meta, shards = preprocess(g, num_shards=4)
+    for s in shards:
+        e = csr_to_ell(s, g.num_vertices, window=window, k=k, tr=tr)
+        assert int(e.ell_mask.sum()) == s.nnz
+        gi = e.global_idx()
+        rows_idx, cols_idx = np.nonzero(e.ell_mask)
+        srcs = gi[rows_idx, cols_idx]
+        dsts = e.seg[rows_idx] + e.v0
+        got = np.sort(srcs.astype(np.int64) * g.num_vertices + dsts)
+        m = (g.dst >= s.v0) & (g.dst < s.v1)
+        ref = np.sort(g.src[m].astype(np.int64) * g.num_vertices + g.dst[m])
+        assert np.array_equal(got, ref)
+        # tiles never straddle windows
+        assert e.n_ell % tr == 0 and e.n_tiles == e.n_ell // tr
+
+
+def test_ell_empty_shard():
+    g = from_edge_list([(0, 1)], num_vertices=10)
+    meta, shards = preprocess(g, num_shards=3)
+    for s in shards:
+        e = csr_to_ell(s, 10, window=8, k=4, tr=8)
+        assert e.n_ell % e.tr == 0
+        assert int(e.ell_mask.sum()) == s.nnz
+
+
+def test_ell_int16_window_bound():
+    g = rmat_graph(200, 1000, seed=5)
+    meta, shards = preprocess(g, num_shards=2)
+    e = csr_to_ell(shards[0], 200, window=1 << 15, k=16, tr=8)
+    assert e.ell_idx.dtype == np.int16
+    e2 = csr_to_ell(shards[0], 200, window=1 << 16, k=16, tr=8)
+    assert e2.ell_idx.dtype == np.int32
+
+
+def test_ell_high_degree_row_splitting():
+    g = star_graph(1000)  # vertex 0 has in-degree 999
+    meta, shards = preprocess(g, num_shards=1)
+    e = csr_to_ell(shards[0], 1000, window=128, k=8, tr=8)
+    # row splitting must produce ceil-per-window rows, all mapping to seg 0
+    assert (e.seg[e.ell_mask.any(axis=1)] == 0).all()
+    assert int(e.ell_mask.sum()) == 999

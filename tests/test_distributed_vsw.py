@@ -1,0 +1,48 @@
+"""Distributed VSW over 8 simulated devices must match the single-device
+engine.  Runs in a subprocess because XLA's host device count must be fixed
+before jax initialises (the main test process keeps 1 device, per spec)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, tempfile
+    from repro.core.graph import rmat_graph
+    from repro.core import apps
+    from repro.core.distributed import run_distributed
+    from repro.core.vsw import VSWEngine
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    g = rmat_graph(700, 9000, seed=11)
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=4, window=4096, k=32,
+                                   backend="numpy", selective=False)
+        for prog, iters in [(apps.pagerank(), 15), (apps.sssp(0), 40),
+                            (apps.wcc(), 60)]:
+            ref = eng.run(prog, max_iters=iters).values
+            got, it = run_distributed(g, prog, mesh, max_iters=iters)
+            a = np.nan_to_num(got, posinf=1e30)
+            b = np.nan_to_num(ref, posinf=1e30)
+            assert np.allclose(a, b, rtol=1e-4, atol=1e-8), prog.name
+    print("DISTRIBUTED_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DISTRIBUTED_OK" in r.stdout

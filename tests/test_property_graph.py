@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants (spec requirement)."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import apps
+from repro.core.csr import csr_to_ell
+from repro.core.graph import Graph, from_edge_list
+from repro.core.sharding import compute_intervals, preprocess
+from repro.core.vsw import VSWEngine, update_shard_numpy
+
+
+@st.composite
+def graphs(draw, max_v=60, max_e=300):
+    n = draw(st.integers(min_value=2, max_value=max_v))
+    m = draw(st.integers(min_value=1, max_value=max_e))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    return Graph(n, np.array(src, np.int32), np.array(dst, np.int32))
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(), st.integers(1, 6))
+def test_sharding_partitions_edges_exactly(g, p):
+    meta, shards = preprocess(g, num_shards=p)
+    assert sum(s.nnz for s in shards) == g.num_edges
+    assert meta.intervals[0] == 0 and meta.intervals[-1] == g.num_vertices
+    assert (np.diff(meta.intervals) > 0).all()
+    # each edge is in exactly the shard of its destination
+    for s in shards:
+        for v in range(s.v0, s.v1):
+            assert np.array_equal(
+                np.sort(s.in_neighbors(v)), np.sort(g.src[g.dst == v])
+            )
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(), st.integers(4, 64), st.integers(2, 16))
+def test_ell_preserves_edge_multiset(g, window, k):
+    meta, shards = preprocess(g, num_shards=2)
+    for s in shards:
+        e = csr_to_ell(s, g.num_vertices, window=window, k=k, tr=8)
+        assert int(e.ell_mask.sum()) == s.nnz
+        gi = e.global_idx()
+        r, c = np.nonzero(e.ell_mask)
+        got = sorted(zip(gi[r, c].tolist(), (e.seg[r] + e.v0).tolist()))
+        m = (g.dst >= s.v0) & (g.dst < s.v1)
+        ref = sorted(zip(g.src[m].tolist(), g.dst[m].tolist()))
+        assert got == ref
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(max_v=40, max_e=150))
+def test_pagerank_mass_conservation(g):
+    """0 < sum(PR) <= 1 (dangling vertices leak mass; none is created)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=2, window=16, k=4,
+                                   backend="numpy", selective=False)
+        r = eng.run(apps.pagerank(), max_iters=15)
+    total = float(r.values.sum())
+    assert 0.0 < total <= 1.0 + 1e-4
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(max_v=40, max_e=150))
+def test_sssp_triangle_inequality(g):
+    """After convergence: dist[v] <= dist[u] + 1 for every edge (u, v)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=2, window=16, k=4,
+                                   backend="numpy", selective=False)
+        r = eng.run(apps.sssp(0), max_iters=g.num_vertices + 2)
+    dist = r.values
+    assert dist[0] == 0.0
+    lhs = dist[g.dst]
+    rhs = dist[g.src] + 1
+    ok = np.isinf(rhs) | (lhs <= rhs + 1e-6)
+    assert ok.all()
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(max_v=40, max_e=150))
+def test_wcc_labels_are_fixed_point(g):
+    """Converged labels: label[v] <= label[u] for every edge (u,v), and
+    every label is the id of some vertex with that label (a root)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=2, window=16, k=4,
+                                   backend="numpy", selective=False)
+        r = eng.run(apps.wcc(), max_iters=g.num_vertices + 2)
+    lab = r.values
+    assert (lab[g.dst] <= lab[g.src] + 1e-6).all()
+    roots = lab[lab.astype(int)]  # label of each label-vertex
+    assert np.array_equal(roots, lab[lab.astype(int)])
+    assert (lab <= np.arange(g.num_vertices)).all()
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graphs(), st.sampled_from(["sum", "min", "max"]))
+def test_update_shard_matches_dense(g, combine):
+    meta, shards = preprocess(g, num_shards=3)
+    msgs = np.random.default_rng(0).random(g.num_vertices).astype(np.float32)
+    for s in shards:
+        acc = update_shard_numpy(s, None, msgs, combine)
+        for v in range(s.v0, s.v1):
+            nbrs = g.src[g.dst == v]
+            if len(nbrs) == 0:
+                continue
+            ref = {"sum": np.sum, "min": np.min, "max": np.max}[combine](msgs[nbrs])
+            assert np.isclose(acc[v - s.v0], ref, rtol=1e-5)

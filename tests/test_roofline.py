@@ -1,0 +1,137 @@
+"""Unit tests: HLO collective parser, roofline terms, scan correction,
+io-model consistency, data pipeline shapes for every arch."""
+
+import numpy as np
+import pytest
+
+from repro.roofline import hw
+from repro.roofline.analysis import (
+    COLLECTIVES,
+    CollectiveStats,
+    RooflineTerms,
+    _shape_bytes,
+    attention_analytic,
+    corrected_terms,
+    model_flops,
+    parse_collectives,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[4,8]") == 64
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(bf16[2,2], f32[2])") == 16
+    assert _shape_bytes("pred[8]") == 8
+    assert _shape_bytes("token[]") == 0  # non-numeric types ignored
+
+
+HLO = """\
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %ag = f32[64]{0} all-gather(%a), replica_groups={{0,1,2,3}}
+  %w = f32[16]{0} while(%init), condition=%cond_1, body=%body_1
+  ROOT %r = f32[16]{0} add(%x, %y)
+}
+%body_1 (p: f32[16]) -> f32[16] {
+  %ar = f32[16]{0} all-reduce(%p), to_apply=%sum
+  ROOT %out = f32[16]{0} add(%ar, %p)
+}
+%cond_1 (p: f32[16]) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+"""
+
+
+def test_parse_collectives_loop_multiplier():
+    c1 = parse_collectives(HLO, loop_trips=1)
+    c5 = parse_collectives(HLO, loop_trips=5)
+    assert c1.bytes_by_kind["all-gather"] == 64 * 4
+    assert c1.bytes_by_kind["all-reduce"] == 16 * 4
+    # the all-reduce lives in the while body: x5; the all-gather doesn't
+    assert c5.bytes_by_kind["all-reduce"] == 5 * 16 * 4
+    assert c5.bytes_by_kind["all-gather"] == 64 * 4
+    assert c1.count_by_kind["all-reduce"] == 1
+
+
+def test_roofline_terms_dominant():
+    t = RooflineTerms(
+        flops_per_dev=197e12,  # exactly 1s of compute
+        bytes_per_dev=819e9 * 2,  # 2s of memory
+        collective_bytes_per_dev=50e9 * 4 * 0.5,  # 0.5s of collective
+        n_chips=256,
+    )
+    assert abs(t.compute_s - 1.0) < 1e-6
+    assert abs(t.memory_s - 2.0) < 1e-6
+    assert abs(t.collective_s - 0.5) < 1e-6
+    assert t.dominant == "memory"
+    assert t.step_time_s == pytest.approx(3.5)
+    assert t.step_time_overlap_s == pytest.approx(2.0)
+
+
+def test_corrected_terms_scan_correction():
+    full = {"flops": 100.0, "bytes accessed": 1000.0}
+    outer = {"flops": 10.0, "bytes accessed": 100.0}
+    t = corrected_terms(full, outer, HLO, trips=5, n_chips=4)
+    assert t.flops_per_dev == (100 - 10) * 5 + 10
+    assert t.bytes_per_dev == (1000 - 100) * 5 + 100
+
+
+def test_model_flops_modes():
+    from repro import configs
+    from repro.config import SHAPES
+
+    cfg = configs.get_config("yi-6b")
+    tr = model_flops(cfg, SHAPES["train_4k"], "train")
+    pf = model_flops(cfg, SHAPES["prefill_32k"], "prefill")
+    dc = model_flops(cfg, SHAPES["decode_32k"], "decode")
+    # train = 6ND on ~1M tokens; prefill = 2ND on ~1M tokens
+    assert tr / pf == pytest.approx(3.0, rel=1e-6)
+    assert dc < pf / 1000  # decode processes batch-many tokens, not seq*batch
+    # MoE uses active params
+    moe = configs.get_config("moonshot-v1-16b-a3b")
+    assert model_flops(moe, SHAPES["train_4k"], "train") < 6 * moe.param_count * 4096 * 256
+
+
+def test_attention_analytic_train_multiplier():
+    from repro import configs
+    from repro.config import SHAPES
+
+    cfg = configs.get_config("gemma-7b")
+    ftrain, _ = attention_analytic(cfg, SHAPES["train_4k"], "train")
+    fpre, _ = attention_analytic(cfg, SHAPES["train_4k"], "prefill")
+    assert ftrain / fpre == pytest.approx(4.0)
+    # hybrid arch counts only its attention layers
+    jam = configs.get_config("jamba-1.5-large-398b")
+    fj, _ = attention_analytic(jam, SHAPES["train_4k"], "prefill")
+    n_attn = sum(1 for i in range(jam.num_layers)
+                 if jam.layer_kind(i)[0] == "attn")
+    assert n_attn == 9
+    per_layer = fj / n_attn
+    full_layer = 4 * 256 * jam.num_heads * (4096 * 4097 / 2) * jam.head_dim
+    assert per_layer == pytest.approx(full_layer)
+
+
+def test_applicable_shapes_skip_rules():
+    from repro import configs
+
+    assert "long_500k" in configs.applicable_shapes("jamba-1.5-large-398b")
+    assert "long_500k" in configs.applicable_shapes("xlstm-350m")
+    for arch in ("yi-6b", "gemma-7b", "whisper-large-v3", "paligemma-3b"):
+        assert "long_500k" not in configs.applicable_shapes(arch)
+    assert len(configs.list_archs()) == 10
+
+
+def test_group_periods():
+    from repro import configs
+
+    assert configs.get_config("jamba-1.5-large-398b").group_period == 8
+    assert configs.get_config("xlstm-350m").group_period == 4
+    assert configs.get_config("yi-6b").group_period == 1
+    assert configs.get_config("moonshot-v1-16b-a3b").group_period == 1
+    for a in configs.list_archs():
+        cfg = configs.get_config(a)
+        assert cfg.num_layers % cfg.group_period == 0
+        # every layer kind is well-defined
+        for i in range(cfg.group_period):
+            mixer, mlp = cfg.layer_kind(i)
+            assert mixer in ("attn", "ssd", "mlstm", "slstm")
+            assert mlp in ("dense", "moe", "none")

@@ -1,0 +1,230 @@
+"""Substrate tests: optimizer, compression, checkpointing (incl. crash/
+restart + corruption detection), data determinism, straggler monitor,
+preemption, end-to-end train loop with resume."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config import smoke_config
+from repro.data.tokens import DataConfig, make_batch
+from repro.distributed.fault_tolerance import (
+    PreemptionGuard,
+    StragglerMonitor,
+)
+from repro.optim import adamw
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_tree,
+    init_error_state,
+    wire_bytes_ratio,
+)
+from repro.train.loop import LoopConfig, train
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, schedule="constant")
+    state = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_lr_schedule_shapes():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.lr_at(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < lrs[9] <= 1.0  # warmup
+    assert lrs[100] < lrs[50] < lrs[11]  # cosine decay
+    assert lrs[100] >= cfg.lr * cfg.min_lr_ratio - 1e-6
+
+
+def test_grad_clip_limits_update_norm():
+    params = {"w": jnp.zeros(4)}
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=0.5, weight_decay=0.0)
+    state = adamw.init(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw.apply_updates(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # measured pre-clip
+
+
+# -------------------------------------------------------------- compression
+@pytest.mark.parametrize("kind,rounds,tol", [("topk", 60, 0.25), ("int8", 30, 0.01)])
+def test_compression_error_feedback_preserves_signal(kind, rounds, tol):
+    """Error feedback: the residual stays bounded by ~(1/ratio)·|g|, so the
+    per-round AVERAGE of sent gradients converges to the true gradient at
+    rate O(1/rounds) — the property that keeps compressed SGD unbiased."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(1000), jnp.float32)}
+    err = init_error_state(g)
+    cfg = CompressionConfig(kind=kind, topk_ratio=0.1)
+    total_sent = jnp.zeros(1000)
+    for _ in range(rounds):  # same gradient repeatedly
+        sent, err = compress_tree(g, err, cfg)
+        total_sent = total_sent + sent["w"]
+    rel = float(
+        jnp.abs(total_sent / rounds - g["w"]).max() / jnp.abs(g["w"]).max()
+    )
+    assert rel < tol, rel
+    # without error feedback, top-k would permanently drop small entries
+    if kind == "topk":
+        nef = CompressionConfig(kind=kind, topk_ratio=0.1, error_feedback=False)
+        sent0, _ = compress_tree(g, init_error_state(g), nef)
+        assert float((sent0["w"] == 0).mean()) > 0.8
+
+
+def test_wire_bytes_ratio():
+    assert wire_bytes_ratio(CompressionConfig("none")) == 1.0
+    assert wire_bytes_ratio(CompressionConfig("int8")) == 0.5  # vs bf16
+    r = wire_bytes_ratio(CompressionConfig("topk", topk_ratio=0.01))
+    assert 0.01 < r < 0.1
+
+
+# ------------------------------------------------------------- checkpointer
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(7, t)
+    out = ck.restore(7, t)
+    assert np.allclose(np.asarray(out["a"]), np.asarray(t["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, t)
+        ck.wait()
+    steps = sorted(os.listdir(tmp_path))
+    assert steps == ["step_00000003", "step_00000004"]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    path = ck.save(1, t)
+    shard = os.path.join(path, "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00" * 8)
+    with pytest.raises(IOError, match="corrupt"):
+        ck.restore(1, t)
+
+
+def test_checkpoint_crash_mid_write_keeps_previous(tmp_path):
+    """A .tmp dir (simulated crash) must not shadow the committed step."""
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(5, t)
+    os.makedirs(os.path.join(tmp_path, "step_00000009.tmp"))
+    assert ck.latest_step() == 5
+    ck.restore(5, t)
+
+
+# --------------------------------------------------------------------- data
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(seq_len=32, global_batch=8, vocab_size=100, seed=1)
+    b1 = make_batch(cfg, step=3)
+    b2 = make_batch(cfg, step=3)
+    assert np.array_equal(b1["tokens"], b2["tokens"])  # stateless resume
+    b3 = make_batch(cfg, step=4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    h0 = DataConfig(seq_len=32, global_batch=8, vocab_size=100, seed=1,
+                    num_hosts=2, host_id=0)
+    h1 = DataConfig(seq_len=32, global_batch=8, vocab_size=100, seed=1,
+                    num_hosts=2, host_id=1)
+    a, b = make_batch(h0, 0), make_batch(h1, 0)
+    assert a["tokens"].shape[0] == 4
+    assert not np.array_equal(a["tokens"], b["tokens"])  # disjoint streams
+
+
+# ---------------------------------------------------- fault tolerance units
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=20, threshold=2.0)
+    for i in range(10):
+        mon.start_step()
+        time.sleep(0.002)
+        mon.end_step(i)
+    mon.start_step()
+    time.sleep(0.05)  # 25x median
+    mon.end_step(10)
+    assert len(mon.events) == 1
+    assert mon.events[0].ratio > 2
+
+
+def test_preemption_guard_flag():
+    g = PreemptionGuard(signals=())
+    assert not g.preempted
+    g.trigger()
+    assert g.preempted
+
+
+# ------------------------------------------------------- end-to-end training
+def test_train_loop_runs_and_resumes(tmp_path):
+    cfg = smoke_config(configs.get_config("qwen2.5-3b"))
+    data_cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=cfg.vocab_size)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=12)
+
+    r1 = train(cfg, data_cfg, LoopConfig(total_steps=6, checkpoint_every=3,
+                                         log_every=0),
+               opt_cfg, checkpoint_dir=str(tmp_path))
+    assert r1.final_step == 6
+    assert np.isfinite(r1.losses).all()
+
+    # resume continues from step 6 without re-running earlier steps
+    r2 = train(cfg, data_cfg, LoopConfig(total_steps=9, checkpoint_every=3,
+                                         log_every=0),
+               opt_cfg, checkpoint_dir=str(tmp_path))
+    assert r2.resumed_from == 6
+    assert r2.final_step == 9
+    assert len(r2.losses) == 3
+
+
+def test_train_loop_preemption_checkpoints_and_stops(tmp_path):
+    cfg = smoke_config(configs.get_config("yi-6b"))
+    data_cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=cfg.vocab_size)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=100)
+    guard = PreemptionGuard(signals=())
+    guard.trigger()  # preempted before step 1 completes
+    r = train(cfg, data_cfg,
+              LoopConfig(total_steps=50, checkpoint_every=100, log_every=0),
+              opt_cfg, checkpoint_dir=str(tmp_path), preemption=guard)
+    assert r.preempted and r.final_step == 1
+    ck = Checkpointer(str(tmp_path))
+    assert ck.latest_step() == 1  # emergency checkpoint written
+
+
+def test_train_loss_decreases_on_structured_data():
+    cfg = smoke_config(configs.get_config("xlstm-350m"))
+    data_cfg = DataConfig(seq_len=64, global_batch=8, vocab_size=cfg.vocab_size,
+                          motif_prob=1.0, motif_len=8)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40,
+                                weight_decay=0.0)
+    r = train(cfg, data_cfg, LoopConfig(total_steps=30, log_every=0), opt_cfg)
+    first = np.mean(r.losses[:5])
+    last = np.mean(r.losses[-5:])
+    assert last < first - 0.1, (first, last)
