@@ -9,6 +9,14 @@ Mapping to the paper:
   fig11_memory     — Fig. 11: resident data bytes per engine.
   table2_io        — Table II: analytic read/write/memory per model, plus
                      measured-vs-analytic validation from the real engines.
+  fig3_pipeline    — Fig. 3 / §II-C: pipelined (prefetching loader threads +
+                     batched kernel dispatch) vs fully synchronous shard
+                     processing on the cache-miss-heavy config.
+
+Standalone usage (CI smoke mode)::
+
+    PYTHONPATH=src python benchmarks/bench_graphmp.py --quick \
+        --out BENCH_graphmp.json
 
 Graphs are synthetic RMAT (the paper's web graphs are power-law; RMAT
 matches the degree skew).  Scale is laptop-sized; the claims validated are
@@ -182,8 +190,96 @@ def table2_io(rows: List[str]) -> None:
             )
 
 
-def run(rows: List[str]) -> None:
+def fig3_pipeline(rows: List[str], *, quick: bool = False) -> None:
+    """Pipelined vs synchronous VSW (paper §II-C / Fig. 3).
+
+    Cache-miss-heavy config: no edge cache, throttled storage channel —
+    every planned shard pays a real (emulated-HDD) read.  The synchronous
+    engine serializes read -> decode -> compute; the pipelined engine runs
+    ``prefetch_depth`` loader threads ahead of the consumer and batches
+    consecutive shards into one kernel dispatch, so read latency and
+    dispatch overhead leave the critical path.
+    """
+    if quick:
+        g = rmat_graph(5_000, 80_000, seed=5)
+        iters, shards = 4, 6
+    else:
+        g = _mk_graph(seed=5)
+        iters, shards = 8, SHARDS
+    cases = [
+        ("sync", dict(prefetch_depth=0, batch_shards=1)),
+        ("pipelined", dict(prefetch_depth=4, batch_shards=4)),
+    ]
+    results = {}
+    for name, kw in cases:
+        with tempfile.TemporaryDirectory() as d:
+            eng = VSWEngine.from_graph(
+                g, d, num_shards=shards, backend="jnp", selective=False,
+                cache_bytes=0, emulate_bw=DISK_BW, **kw,
+            )
+            eng.run(apps.pagerank(), max_iters=1)  # warm jit caches
+            t0 = time.perf_counter()
+            r = eng.run(apps.pagerank(), max_iters=iters)
+            wall = time.perf_counter() - t0
+            results[name] = (wall / r.num_iterations, r)
+            eng.close()
+    t_sync, _ = results["sync"]
+    t_pipe, rp = results["pipelined"]
+    overlap = rp.total_load_overlap_s / rp.num_iterations
+    dispatches = rp.iterations[-1].dispatches
+    for name, (t, _) in results.items():
+        rows.append(
+            f"fig3_pipeline_pagerank_{name},{t*1e6:.0f},"
+            f"speedup_vs_sync={t_sync/max(t,1e-12):.2f}x"
+            + (f";overlap_s_iter={overlap:.4f}"
+               f";dispatches_iter={dispatches}" if name == "pipelined" else "")
+        )
+
+
+def run(rows: List[str], *, quick: bool = False) -> None:
+    if quick:
+        fig3_pipeline(rows, quick=True)
+        return
     fig5_selective(rows)
     fig8_10_engines(rows)
     fig11_memory(rows)
     table2_io(rows)
+    fig3_pipeline(rows)
+
+
+def main() -> None:
+    """Standalone entry point (CI smoke mode emits a BENCH_*.json)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graph, pipeline section only")
+    ap.add_argument("--out", default=None,
+                    help="also write rows as JSON to this path")
+    args = ap.parse_args()
+
+    rows: List[str] = []
+    t0 = time.perf_counter()
+    run(rows, quick=args.quick)
+    wall = time.perf_counter() - t0
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if args.out:
+        payload = {
+            "bench": "graphmp",
+            "quick": args.quick,
+            "wall_s": wall,
+            "rows": [
+                dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                for r in rows
+            ],
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

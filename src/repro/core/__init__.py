@@ -19,6 +19,9 @@ from .graph import (
     star_graph,
     uniform_graph,
 )
+from .executor import BatchedEllExecutor, PerShardExecutor, make_executor
+from .pipeline import LoadedShard, PipelineStats, ShardPipeline
+from .scheduler import ShardPlan, ShardScheduler
 from .vsw import BACKENDS, IterStats, RunResult, VSWEngine
 
 __all__ = [
@@ -34,4 +37,12 @@ __all__ = [
     "IterStats",
     "RunResult",
     "VSWEngine",
+    "ShardScheduler",
+    "ShardPlan",
+    "ShardPipeline",
+    "PipelineStats",
+    "LoadedShard",
+    "PerShardExecutor",
+    "BatchedEllExecutor",
+    "make_executor",
 ]

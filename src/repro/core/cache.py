@@ -25,6 +25,7 @@ up exactly with the I/O model's ``θ·D·|E|`` term: ``θ`` is literally
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import zlib
 from collections import OrderedDict
@@ -74,7 +75,13 @@ class CacheStats:
 
 
 class ShardCache:
-    """LRU cache of (optionally compressed) shard container bytes."""
+    """LRU cache of (optionally compressed) shard container bytes.
+
+    Thread-safe: the prefetching loader (``repro.core.pipeline``) calls
+    ``get``/``put`` from background threads, so the LRU book-keeping and the
+    stats counters are guarded by one lock.  Compression/decompression run
+    outside the lock — they are the expensive part and operate on local data.
+    """
 
     def __init__(self, capacity_bytes: int, mode: int = 1):
         if mode not in MODES:
@@ -85,49 +92,64 @@ class ShardCache:
         self.stats = CacheStats()
         self._data: "OrderedDict[int, bytes]" = OrderedDict()
         self._bytes = 0
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     @property
     def stored_bytes(self) -> int:
-        return self._bytes
+        with self._lock:
+            return self._bytes
 
     def get(self, shard_id: int) -> Optional[bytes]:
         """Return the *raw* (decompressed) shard bytes, or None on miss."""
-        blob = self._data.get(shard_id)
-        if blob is None:
-            self.stats.misses += 1
-            return None
-        self._data.move_to_end(shard_id)
+        with self._lock:
+            blob = self._data.get(shard_id)
+            if blob is None:
+                self.stats.misses += 1
+                return None
+            self._data.move_to_end(shard_id)
+            self.stats.hits += 1
         t0 = time.perf_counter()
         raw = self.mode.decompress(blob)
-        self.stats.decompress_time_s += time.perf_counter() - t0
-        self.stats.hits += 1
+        with self._lock:
+            self.stats.decompress_time_s += time.perf_counter() - t0
         return raw
 
     def put(self, shard_id: int, raw: bytes) -> bool:
         """Insert if it fits; returns True if cached."""
-        if shard_id in self._data:
-            return True
+        with self._lock:
+            if shard_id in self._data:
+                # Re-put counts as a touch: refresh recency or the entry
+                # ages as if never used and gets evicted first.
+                self._data.move_to_end(shard_id)
+                return True
         t0 = time.perf_counter()
         blob = self.mode.compress(raw)
-        self.stats.compress_time_s += time.perf_counter() - t0
-        if len(blob) > self.capacity_bytes:
-            return False
-        while self._bytes + len(blob) > self.capacity_bytes and self._data:
-            _, old = self._data.popitem(last=False)
-            self._bytes -= len(old)
-            self.stats.evictions += 1
-        self._data[shard_id] = blob
-        self._bytes += len(blob)
-        self.stats.inserted_bytes_raw += len(raw)
-        self.stats.inserted_bytes_stored += len(blob)
-        return True
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats.compress_time_s += dt
+            if len(blob) > self.capacity_bytes:
+                return False
+            if shard_id in self._data:  # raced with another loader thread
+                self._data.move_to_end(shard_id)
+                return True
+            while self._bytes + len(blob) > self.capacity_bytes and self._data:
+                _, old = self._data.popitem(last=False)
+                self._bytes -= len(old)
+                self.stats.evictions += 1
+            self._data[shard_id] = blob
+            self._bytes += len(blob)
+            self.stats.inserted_bytes_raw += len(raw)
+            self.stats.inserted_bytes_stored += len(blob)
+            return True
 
     def clear(self) -> None:
-        self._data.clear()
-        self._bytes = 0
+        with self._lock:
+            self._data.clear()
+            self._bytes = 0
 
 
 def select_cache_mode(

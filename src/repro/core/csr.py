@@ -27,13 +27,56 @@ combine identity and are therefore harmless.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from .sharding import ShardCSR
 
-__all__ = ["EllShard", "csr_to_ell", "DEFAULT_K", "DEFAULT_TR", "DEFAULT_WINDOW"]
+__all__ = [
+    "EllShard",
+    "EllBatch",
+    "csr_to_ell",
+    "concat_ells",
+    "next_pow2",
+    "bucket_rows",
+    "pad_ell_arrays",
+    "DEFAULT_K",
+    "DEFAULT_TR",
+    "DEFAULT_WINDOW",
+]
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def bucket_rows(n_ell: int, tr: int) -> int:
+    """Shape bucket for jit caching: next power of two, rounded up to a
+    tile multiple so a ``(TR, K)`` grid still covers it exactly."""
+    n = max(next_pow2(n_ell), tr)
+    return -(-n // tr) * tr
+
+
+def pad_ell_arrays(idx, mask, seg, tw, n_ell: int, tr: int, n_ell_pad: int):
+    """Pad ELL arrays to ``n_ell_pad`` rows (``n_ell_pad % tr == 0``).
+
+    Padding rows carry ``mask=False`` / ``seg=0`` / window id 0 — they
+    gather the combine identity into the first destination row, a no-op.
+    ``tile_window`` is padded with ceil division: floor (``pad // tr``)
+    silently truncates whenever the row padding isn't a tile multiple,
+    leaving the padded tail without a window id.
+    """
+    pad = n_ell_pad - n_ell
+    if pad == 0:
+        return idx, mask, seg, tw
+    assert n_ell_pad % tr == 0, (n_ell_pad, tr)
+    idx = np.concatenate([idx, np.zeros((pad, idx.shape[1]), idx.dtype)])
+    mask = np.concatenate([mask, np.zeros((pad, mask.shape[1]), bool)])
+    seg = np.concatenate([seg, np.zeros(pad, np.int32)])
+    tw = np.concatenate([tw, np.zeros(n_ell_pad // tr - tw.shape[0], np.int32)])
+    assert idx.shape[0] == n_ell_pad and tw.shape[0] * tr == n_ell_pad
+    return idx, mask, seg, tw
 
 DEFAULT_K = 128  # ELL width == TPU lane count
 DEFAULT_TR = 8  # tile rows == TPU sublane count
@@ -91,6 +134,91 @@ class EllShard:
         """Fraction of ELL slots that are padding (wasted bandwidth)."""
         total = self.ell_idx.size
         return 1.0 - (self.nnz / total) if total else 0.0
+
+
+@dataclasses.dataclass
+class EllBatch:
+    """N consecutive ELL shards concatenated into one kernel dispatch.
+
+    All constituent shards share ``window``/``k``/``tr``/``num_vertices``
+    (one preprocessing run), so their tile->window prefetch maps live in the
+    same coordinate system and simply concatenate: a single Pallas grid
+    walks every tile of every shard against ONE resident message table,
+    amortizing per-shard dispatch overhead (DESIGN.md §4).
+
+    ``seg`` is globalized (shard-local destination row + the shard's row
+    offset) so one segment combine with ``rows_total`` segments covers the
+    whole batch; ``row_offsets`` splits the combined accumulator back into
+    per-shard intervals.
+    """
+
+    shard_ids: list
+    ell_idx: np.ndarray  # [sum n_ell, K]
+    ell_mask: np.ndarray  # bool [sum n_ell, K]
+    seg: np.ndarray  # int32 [sum n_ell] globalized destination rows
+    tile_window: np.ndarray  # int32 [sum n_tiles]
+    row_offsets: np.ndarray  # int64 [N+1] shard row boundaries in the acc
+    num_vertices: int
+    window: int
+    k: int
+    tr: int
+
+    @property
+    def rows_total(self) -> int:
+        return int(self.row_offsets[-1])
+
+    @property
+    def n_ell(self) -> int:
+        return int(self.ell_idx.shape[0])
+
+    @property
+    def num_windows(self) -> int:
+        return max(1, -(-self.num_vertices // self.window))
+
+    def split(self, acc: np.ndarray) -> list:
+        """Slice a combined [rows_total] accumulator back per shard."""
+        return [
+            acc[self.row_offsets[i]: self.row_offsets[i + 1]]
+            for i in range(len(self.shard_ids))
+        ]
+
+
+def concat_ells(ells: Sequence[EllShard]) -> EllBatch:
+    """Concatenate ELL shards for one batched dispatch.
+
+    Requires a homogeneous batch (same window/k/tr/num_vertices — true for
+    any shards from one store) and tile-aligned shards (``n_ell % tr == 0``,
+    guaranteed by :func:`csr_to_ell`'s per-window padding).
+    """
+    if not ells:
+        raise ValueError("empty ELL batch")
+    first = ells[0]
+    for e in ells[1:]:
+        if (e.window, e.k, e.tr, e.num_vertices) != (
+            first.window, first.k, first.tr, first.num_vertices
+        ):
+            raise ValueError("ELL shards in a batch must share window/k/tr/|V|")
+    for e in ells:
+        if e.n_ell % e.tr:
+            raise ValueError(f"shard {e.shard_id}: n_ell not tile-aligned")
+    row_offsets = np.zeros(len(ells) + 1, dtype=np.int64)
+    np.cumsum([e.rows for e in ells], out=row_offsets[1:])
+    seg = np.concatenate(
+        [e.seg.astype(np.int32) + np.int32(off)
+         for e, off in zip(ells, row_offsets[:-1])]
+    )
+    return EllBatch(
+        shard_ids=[e.shard_id for e in ells],
+        ell_idx=np.concatenate([e.ell_idx for e in ells]),
+        ell_mask=np.concatenate([e.ell_mask for e in ells]),
+        seg=seg,
+        tile_window=np.concatenate([e.tile_window for e in ells]),
+        row_offsets=row_offsets,
+        num_vertices=first.num_vertices,
+        window=first.window,
+        k=first.k,
+        tr=first.tr,
+    )
 
 
 def csr_to_ell(

@@ -1,0 +1,305 @@
+"""Shard executors: *how planned shards execute* (DESIGN.md §3-4).
+
+Third layer of the engine stack.  An executor consumes the pipeline's
+stream of loaded shards and yields per-shard accumulators; it owns the
+backend dispatch the engine used to do inline.
+
+Two strategies:
+
+- :class:`PerShardExecutor` — one backend call per shard (the paper's
+  worker model; also the only choice for the numpy oracle, whose
+  scatter-reduce has no dispatch overhead to amortize).
+- :class:`BatchedEllExecutor` — groups up to ``batch_shards`` consecutive
+  planned ELL shards into ONE concatenated kernel dispatch (shared
+  ``tile_window`` prefetch map, one ``pallas_call`` / one jit call for N
+  shards).  Bitwise-equal to per-shard execution by construction: the
+  batch is a pure concatenation, so every tile computes identical partials
+  and the globalized segment combine preserves per-segment contribution
+  order.
+
+Shard-update backends (moved here from ``vsw.py``); signature
+``(csr, ell, msgs, combine) -> acc [rows] float32``:
+
+=========  ==================================================================
+numpy      ``np.add.at`` / ``np.minimum.at`` scatter-reduce over CSR — the
+           bitwise oracle.
+jnp        windowed ELL gather + masked reduce + segment combine under
+           ``jax.jit`` (shape-bucketed to bound recompiles) — what XLA
+           would run.
+pallas     the ``repro.kernels.spmv_ell`` TPU kernel (interpret mode on
+           CPU) — the production hot loop.
+=========  ==================================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+import numpy as np
+
+from .apps import COMBINE_IDENTITY
+from .csr import EllShard, bucket_rows, concat_ells, next_pow2, pad_ell_arrays
+from .pipeline import LoadedShard
+from .sharding import ShardCSR
+
+__all__ = [
+    "BACKENDS",
+    "ExecResult",
+    "ExecStats",
+    "PerShardExecutor",
+    "BatchedEllExecutor",
+    "make_executor",
+    "update_shard_numpy",
+    "update_shard_jnp",
+    "update_shards_jnp_batched",
+]
+
+
+# --------------------------------------------------------------------------
+# Shard-update backends
+# --------------------------------------------------------------------------
+
+
+def update_shard_numpy(
+    csr: ShardCSR, ell: Optional[EllShard], msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    """Scatter-reduce oracle over the CSR shard."""
+    rows = csr.rows
+    acc = np.full(rows, COMBINE_IDENTITY[combine], dtype=msgs.dtype)
+    if csr.nnz == 0:
+        return acc
+    local_dst = np.repeat(np.arange(rows, dtype=np.int64), np.diff(csr.row))
+    vals = msgs[csr.col]
+    if combine == "sum":
+        np.add.at(acc, local_dst, vals)
+    elif combine == "min":
+        np.minimum.at(acc, local_dst, vals)
+    elif combine == "max":
+        np.maximum.at(acc, local_dst, vals)
+    else:  # pragma: no cover
+        raise ValueError(combine)
+    return acc
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_ell_fn(n_ell: int, k: int, tr: int, rows: int, window: int, combine: str):
+    """Build a jit'd ELL update for one padded shape bucket."""
+    import jax
+    import jax.numpy as jnp
+
+    ident = COMBINE_IDENTITY[combine]
+
+    def fn(ell_idx, ell_mask, seg, tile_window, msgs):
+        win = jnp.repeat(tile_window, tr)  # [n_ell]
+        gidx = ell_idx.astype(jnp.int32) + win[:, None] * window
+        g = jnp.take(msgs, gidx, axis=0, mode="clip")
+        g = jnp.where(ell_mask, g, jnp.asarray(ident, g.dtype))
+        if combine == "sum":
+            part = g.sum(axis=1)
+            acc = jax.ops.segment_sum(part, seg, num_segments=rows)
+        elif combine == "min":
+            part = g.min(axis=1)
+            acc = jax.ops.segment_min(part, seg, num_segments=rows)
+            acc = jnp.where(jnp.isfinite(acc), acc, jnp.asarray(ident, g.dtype))
+        else:
+            part = g.max(axis=1)
+            acc = jax.ops.segment_max(part, seg, num_segments=rows)
+            acc = jnp.where(jnp.isfinite(acc), acc, jnp.asarray(ident, g.dtype))
+        return acc
+
+    return jax.jit(fn)
+
+
+def update_shard_jnp(
+    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    """Windowed-ELL gather/combine under jit (shape-bucketed)."""
+    import jax.numpy as jnp
+
+    n_ell_pad = bucket_rows(ell.n_ell, ell.tr)
+    rows = ell.rows
+    idx, mask, seg, tw = pad_ell_arrays(
+        ell.ell_idx, ell.ell_mask, ell.seg, ell.tile_window,
+        ell.n_ell, ell.tr, n_ell_pad,
+    )
+    # Pad msgs to full windows so gather never reads OOB.
+    n_pad_v = ell.num_windows * ell.window
+    msgs_p = np.pad(msgs, (0, n_pad_v - msgs.shape[0]))
+    fn = _jnp_ell_fn(n_ell_pad, ell.k, ell.tr, rows, ell.window, combine)
+    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+             jnp.asarray(tw), jnp.asarray(msgs_p))
+    return np.asarray(acc)
+
+
+def update_shards_jnp_batched(
+    ells: List[EllShard], msgs: np.ndarray, combine: str
+) -> List[np.ndarray]:
+    """One jit dispatch for N concatenated shards (jnp backend).
+
+    Both the ELL row count AND the segment count are shape-bucketed
+    (pow2): batch composition changes every iteration under selective
+    scheduling, and without bucketing each distinct (n_ell, rows_total)
+    pair would force a fresh XLA compile.  Padding rows land in the
+    batch's first destination row carrying the combine identity, and
+    surplus segments are simply never referenced by ``split`` — both
+    no-ops, so bucketing never changes results.
+    """
+    import jax.numpy as jnp
+
+    if not ells:
+        return []
+    batch = concat_ells(ells)
+    tr = batch.tr
+    n_ell_pad = bucket_rows(batch.n_ell, tr)
+    idx, mask, seg, tw = pad_ell_arrays(
+        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
+        batch.n_ell, tr, n_ell_pad,
+    )
+    n_pad_v = batch.num_windows * batch.window
+    msgs_p = np.pad(msgs, (0, n_pad_v - msgs.shape[0]))
+    rows_pad = next_pow2(batch.rows_total)
+    fn = _jnp_ell_fn(n_ell_pad, batch.k, tr, rows_pad, batch.window, combine)
+    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+             jnp.asarray(tw), jnp.asarray(msgs_p))
+    return batch.split(np.asarray(acc))
+
+
+def _update_shard_pallas(
+    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return np.asarray(spmv_ops.ell_update(ell, msgs, combine))
+
+
+def _update_shards_pallas_batched(
+    ells: List[EllShard], msgs: np.ndarray, combine: str
+) -> List[np.ndarray]:
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return [np.asarray(a) for a in spmv_ops.ell_update_batched(ells, msgs, combine)]
+
+
+BACKENDS: Dict[str, Callable] = {
+    "numpy": update_shard_numpy,
+    "jnp": update_shard_jnp,
+    "pallas": _update_shard_pallas,
+}
+
+_BATCHED_BACKENDS: Dict[str, Callable] = {
+    "jnp": update_shards_jnp_batched,
+    "pallas": _update_shards_pallas_batched,
+}
+
+
+# --------------------------------------------------------------------------
+# Executors
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """One shard's accumulator plus which dispatch produced it."""
+
+    shard_id: int
+    v0: int
+    v1: int
+    acc: np.ndarray
+    batch_size: int = 1  # shards sharing the kernel dispatch
+
+
+@dataclasses.dataclass
+class ExecStats:
+    """Per-iteration dispatch accounting (reset each iteration)."""
+
+    dispatches: int = 0
+    shards_executed: int = 0
+    exec_s: float = 0.0
+
+    def reset(self) -> None:
+        self.dispatches = self.shards_executed = 0
+        self.exec_s = 0.0
+
+
+class PerShardExecutor:
+    """One backend call per loaded shard (paper worker model)."""
+
+    def __init__(self, backend: str):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend}; have {sorted(BACKENDS)}")
+        self.backend_name = backend
+        self._fn = BACKENDS[backend]
+
+    def run(
+        self,
+        loaded: Iterable[LoadedShard],
+        msgs: np.ndarray,
+        combine: str,
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[ExecResult]:
+        for ls in loaded:
+            t0 = time.perf_counter()
+            acc = self._fn(ls.csr, ls.ell, msgs, combine)
+            if stats is not None:
+                stats.dispatches += 1
+                stats.shards_executed += 1
+                stats.exec_s += time.perf_counter() - t0
+            ref = ls.ref
+            yield ExecResult(ls.shard_id, ref.v0, ref.v1, np.asarray(acc))
+
+
+class BatchedEllExecutor:
+    """Batch consecutive planned ELL shards into one kernel dispatch."""
+
+    def __init__(self, backend: str, batch_shards: int = 4):
+        if backend not in _BATCHED_BACKENDS:
+            raise ValueError(
+                f"batched execution needs an ELL backend, got {backend!r}"
+            )
+        if batch_shards < 1:
+            raise ValueError("batch_shards must be >= 1")
+        self.backend_name = backend
+        self.batch_shards = batch_shards
+        self._fn = _BATCHED_BACKENDS[backend]
+
+    def run(
+        self,
+        loaded: Iterable[LoadedShard],
+        msgs: np.ndarray,
+        combine: str,
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[ExecResult]:
+        buf: List[LoadedShard] = []
+        for ls in loaded:
+            buf.append(ls)
+            if len(buf) >= self.batch_shards:
+                yield from self._flush(buf, msgs, combine, stats)
+                buf = []
+        if buf:
+            yield from self._flush(buf, msgs, combine, stats)
+
+    def _flush(self, buf, msgs, combine, stats) -> Iterator[ExecResult]:
+        t0 = time.perf_counter()
+        accs = self._fn([ls.ell for ls in buf], msgs, combine)
+        if stats is not None:
+            stats.dispatches += 1
+            stats.shards_executed += len(buf)
+            stats.exec_s += time.perf_counter() - t0
+        for ls, acc in zip(buf, accs):
+            yield ExecResult(
+                ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc),
+                batch_size=len(buf),
+            )
+
+
+def make_executor(backend: str, *, batch_shards: int = 1):
+    """Pick the executor for a backend: batching only exists for the ELL
+    (jnp/pallas) backends; the numpy oracle always runs per-shard."""
+    if batch_shards < 1:
+        raise ValueError("batch_shards must be >= 1")
+    if batch_shards > 1 and backend in _BATCHED_BACKENDS:
+        return BatchedEllExecutor(backend, batch_shards)
+    return PerShardExecutor(backend)

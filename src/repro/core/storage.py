@@ -15,10 +15,12 @@ analogue of the paper's HDD (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import concurrent.futures
 import io
 import json
 import os
-from typing import Dict, List, Optional
+import threading
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -84,6 +86,16 @@ class ShardStore:
         os.makedirs(root, exist_ok=True)
         self.io = IOStats()
         self.emulate_bw = emulate_bw
+        # The prefetching loader issues reads from background threads;
+        # counter updates must not tear (snapshot()/__sub__ deltas would
+        # drift), so every IOStats mutation holds this lock.
+        self._io_lock = threading.Lock()
+        # Emulated disk is ONE shared channel: concurrent reads queue for
+        # bandwidth rather than each sleeping independently (N loader
+        # threads must not emulate N disks — pipelining hides latency
+        # behind compute, it does not multiply channel bandwidth).
+        self._throttle_lock = threading.Lock()
+        self._channel_free_at = 0.0
 
     # ------------------------------------------------------------------ raw
     def _path(self, name: str) -> str:
@@ -93,13 +105,20 @@ class ShardStore:
         if self.emulate_bw:
             import time
 
-            time.sleep(nbytes / self.emulate_bw)
+            with self._throttle_lock:
+                now = time.monotonic()
+                start = max(now, self._channel_free_at)
+                self._channel_free_at = start + nbytes / self.emulate_bw
+                wait = self._channel_free_at - now
+            if wait > 0:
+                time.sleep(wait)
 
     def read_bytes(self, name: str) -> bytes:
         with open(self._path(name), "rb") as f:
             raw = f.read()
-        self.io.bytes_read += len(raw)
-        self.io.reads += 1
+        with self._io_lock:
+            self.io.bytes_read += len(raw)
+            self.io.reads += 1
         self._throttle(len(raw))
         return raw
 
@@ -108,8 +127,9 @@ class ShardStore:
         with open(tmp, "wb") as f:
             f.write(raw)
         os.replace(tmp, self._path(name))  # atomic: no torn shard files
-        self.io.bytes_written += len(raw)
-        self.io.writes += 1
+        with self._io_lock:
+            self.io.bytes_written += len(raw)
+            self.io.writes += 1
         self._throttle(len(raw))
 
     def exists(self, name: str) -> bool:
@@ -190,6 +210,39 @@ class ShardStore:
         """Read the raw (uncompressed) shard container from disk."""
         return self.read_bytes(self.shard_name(p, fmt))
 
+    def shard_bytes_bulk(
+        self,
+        ps: Sequence[int],
+        fmt: str = "csr",
+        *,
+        max_workers: int = 0,
+    ) -> Dict[int, bytes]:
+        """Read several shard containers in one call.
+
+        ``max_workers > 1`` issues the reads concurrently — on a spinning
+        HDD this lets the OS elevator sort the requests; on the accounted
+        throttled channel the per-read sleeps overlap, which is exactly what
+        N real loader threads would achieve (paper §II-C's dedicated load
+        threads).  I/O accounting is identical either way.
+        """
+        ps = list(ps)
+        if max_workers > 1 and len(ps) > 1:
+            with concurrent.futures.ThreadPoolExecutor(
+                max_workers=min(max_workers, len(ps))
+            ) as pool:
+                raws = list(pool.map(lambda p: self.shard_bytes(p, fmt), ps))
+            return dict(zip(ps, raws))
+        return {p: self.shard_bytes(p, fmt) for p in ps}
+
+    def read_bytes_async(
+        self, name: str, pool: concurrent.futures.Executor
+    ) -> "concurrent.futures.Future[bytes]":
+        """Schedule an accounted read on ``pool``; the future resolves to
+        the raw bytes.  For callers that want raw-byte prefetch without the
+        shard pipeline's cache/decode stages (which submits whole
+        load-and-decode jobs to its own pool instead)."""
+        return pool.submit(self.read_bytes, name)
+
     @staticmethod
     def decode_csr(p: int, raw: bytes) -> ShardCSR:
         z = _load_npz_bytes(raw)
@@ -213,6 +266,15 @@ class ShardStore:
         if fmt == "csr":
             return self.decode_csr(p, raw)
         return self.decode_ell(p, raw)
+
+    def load_shards(self, ps: Sequence[int], fmt: str = "csr", *,
+                    max_workers: int = 0) -> Dict[int, object]:
+        """Bulk read + decode convenience (all raws resident at once —
+        callers that need streaming should chunk their own
+        :meth:`shard_bytes_bulk` calls instead)."""
+        raws = self.shard_bytes_bulk(ps, fmt, max_workers=max_workers)
+        decode = self.decode_csr if fmt == "csr" else self.decode_ell
+        return {p: decode(p, raw) for p, raw in raws.items()}
 
     # ------------------------------------------------------ auxiliary blobs
     def write_aux(self, name: str, **arrays) -> None:

@@ -13,34 +13,49 @@ Semantics reproduced exactly:
 - compressed edge cache consulted before every disk read (§II-D-2),
 - termination when an iteration produces zero active vertices.
 
-Three interchangeable shard-update backends (all must agree; tests enforce):
+The engine is a thin orchestrator over three explicit layers (DESIGN.md §3):
 
-=========  ==================================================================
-numpy      ``np.add.at`` / ``np.minimum.at`` scatter-reduce over CSR — the
-           bitwise oracle.
-jnp        windowed ELL gather + masked reduce + segment combine under
-           ``jax.jit`` (shape-bucketed to bound recompiles) — what XLA
-           would run.
-pallas     the ``repro.kernels.spmv_ell`` TPU kernel (interpret mode on
-           CPU) — the production hot loop.
-=========  ==================================================================
+==========  ===============================================================
+scheduler   :class:`~repro.core.scheduler.ShardScheduler` — owns the Bloom/
+            exact filters and emits the per-iteration ordered shard plan.
+pipeline    :class:`~repro.core.pipeline.ShardPipeline` — walks the plan
+            with ``prefetch_depth`` background loader threads so disk read
+            + cache lookup + decode overlap compute (paper §II-C, Fig. 3).
+executor    :mod:`repro.core.executor` — backend dispatch; with
+            ``batch_shards > 1`` the jnp/pallas backends fuse consecutive
+            planned shards into one kernel dispatch.
+==========  ===============================================================
+
+All layer combinations produce bit-identical values: the plan fixes the
+processing order, only the consumer thread touches the vertex arrays, and
+batched dispatch is a pure concatenation (DESIGN.md §5).
+
+The shard-update backends (``update_shard_numpy`` / ``update_shard_jnp`` /
+``BACKENDS``) live in :mod:`repro.core.executor` and are re-exported here
+for compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import numpy as np
 
-from .apps import COMBINE_IDENTITY, VertexProgram
-from .bloom import BloomFilter, build_shard_filters
+from .apps import VertexProgram
 from .cache import ShardCache
-from .csr import EllShard
+from .executor import (
+    BACKENDS,
+    ExecStats,
+    make_executor,
+    update_shard_jnp,
+    update_shard_numpy,
+)
 from .graph import Graph
-from .sharding import GraphMeta, ShardCSR, preprocess
+from .pipeline import PipelineStats, ShardPipeline
+from .scheduler import ShardScheduler
+from .sharding import preprocess
 from .storage import ShardStore
 
 __all__ = [
@@ -51,115 +66,6 @@ __all__ = [
     "update_shard_jnp",
     "BACKENDS",
 ]
-
-# --------------------------------------------------------------------------
-# Shard-update backends: (csr, ell, msgs, combine) -> acc [rows] float32
-# --------------------------------------------------------------------------
-
-
-def update_shard_numpy(
-    csr: ShardCSR, ell: Optional[EllShard], msgs: np.ndarray, combine: str
-) -> np.ndarray:
-    """Scatter-reduce oracle over the CSR shard."""
-    rows = csr.rows
-    acc = np.full(rows, COMBINE_IDENTITY[combine], dtype=msgs.dtype)
-    if csr.nnz == 0:
-        return acc
-    local_dst = np.repeat(np.arange(rows, dtype=np.int64), np.diff(csr.row))
-    vals = msgs[csr.col]
-    if combine == "sum":
-        np.add.at(acc, local_dst, vals)
-    elif combine == "min":
-        np.minimum.at(acc, local_dst, vals)
-    elif combine == "max":
-        np.maximum.at(acc, local_dst, vals)
-    else:  # pragma: no cover
-        raise ValueError(combine)
-    return acc
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
-
-
-@functools.lru_cache(maxsize=64)
-def _jnp_ell_fn(n_ell: int, k: int, tr: int, rows: int, window: int, combine: str):
-    """Build a jit'd ELL update for one padded shape bucket."""
-    import jax
-    import jax.numpy as jnp
-
-    ident = COMBINE_IDENTITY[combine]
-
-    def fn(ell_idx, ell_mask, seg, tile_window, msgs):
-        win = jnp.repeat(tile_window, tr)  # [n_ell]
-        gidx = ell_idx.astype(jnp.int32) + win[:, None] * window
-        g = jnp.take(msgs, gidx, axis=0, mode="clip")
-        g = jnp.where(ell_mask, g, jnp.asarray(ident, g.dtype))
-        if combine == "sum":
-            part = g.sum(axis=1)
-            acc = jax.ops.segment_sum(part, seg, num_segments=rows)
-        elif combine == "min":
-            part = g.min(axis=1)
-            acc = jax.ops.segment_min(part, seg, num_segments=rows)
-            acc = jnp.where(jnp.isfinite(acc), acc, jnp.asarray(ident, g.dtype))
-        else:
-            part = g.max(axis=1)
-            acc = jax.ops.segment_max(part, seg, num_segments=rows)
-            acc = jnp.where(jnp.isfinite(acc), acc, jnp.asarray(ident, g.dtype))
-        return acc
-
-    return jax.jit(fn)
-
-
-def _pad_ell(ell: EllShard, n_ell_pad: int):
-    pad = n_ell_pad - ell.n_ell
-    if pad == 0:
-        return ell.ell_idx, ell.ell_mask, ell.seg, ell.tile_window
-    idx = np.concatenate([ell.ell_idx, np.zeros((pad, ell.k), ell.ell_idx.dtype)])
-    mask = np.concatenate([ell.ell_mask, np.zeros((pad, ell.k), bool)])
-    seg = np.concatenate([ell.seg, np.zeros(pad, np.int32)])
-    tw = np.concatenate(
-        [ell.tile_window, np.zeros(pad // ell.tr, np.int32)]
-    )
-    return idx, mask, seg, tw
-
-
-def update_shard_jnp(
-    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
-) -> np.ndarray:
-    """Windowed-ELL gather/combine under jit (shape-bucketed)."""
-    import jax.numpy as jnp
-
-    n_ell_pad = max(_next_pow2(ell.n_ell), ell.tr)
-    rows = ell.rows
-    idx, mask, seg, tw = _pad_ell(ell, n_ell_pad)
-    # Pad msgs to full windows so gather never reads OOB.
-    n_pad_v = ell.num_windows * ell.window
-    msgs_p = np.pad(msgs, (0, n_pad_v - msgs.shape[0]))
-    fn = _jnp_ell_fn(n_ell_pad, ell.k, ell.tr, rows, ell.window, combine)
-    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
-             jnp.asarray(tw), jnp.asarray(msgs_p))
-    return np.asarray(acc)
-
-
-def _update_shard_pallas(
-    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
-) -> np.ndarray:
-    from repro.kernels.spmv_ell import ops as spmv_ops
-
-    return np.asarray(spmv_ops.ell_update(ell, msgs, combine))
-
-
-BACKENDS: Dict[str, Callable] = {
-    "numpy": update_shard_numpy,
-    "jnp": update_shard_jnp,
-    "pallas": _update_shard_pallas,
-}
-
-
-# --------------------------------------------------------------------------
-# Engine
-# --------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -174,6 +80,14 @@ class IterStats:
     active_count: int
     active_ratio: float
     selective_on: bool
+    # ---- pipeline/executor decomposition (added with the layered engine;
+    # defaults keep older constructors — baselines — source-compatible).
+    load_total_s: float = 0.0  # sum of in-thread load+decode durations
+    load_wait_s: float = 0.0  # critical-path stall waiting on loads
+    load_overlap_s: float = 0.0  # load work hidden behind compute
+    exec_s: float = 0.0  # backend dispatch time
+    dispatches: int = 0  # kernel dispatches (< processed when batching)
+    prefetch_depth: int = 0
 
 
 @dataclasses.dataclass
@@ -194,6 +108,10 @@ class RunResult:
     def total_time_s(self) -> float:
         return sum(i.time_s for i in self.iterations)
 
+    @property
+    def total_load_overlap_s(self) -> float:
+        return sum(i.load_overlap_s for i in self.iterations)
+
 
 class VSWEngine:
     """GraphMP: semi-external-memory vertex-centric engine."""
@@ -210,36 +128,50 @@ class VSWEngine:
         bloom_fp: float = 0.01,
         exact_selective: bool = False,
         device_resident: bool = False,
+        prefetch_depth: int = 2,
+        batch_shards: int = 1,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend}; have {sorted(BACKENDS)}")
         self.store = store
         self.meta = store.read_meta()
         self.backend_name = backend
-        self.backend = BACKENDS[backend]
-        self.selective = selective
-        self.threshold = threshold
-        self.exact_selective = exact_selective
         if cache_bytes > 0 and cache_mode == 0:
             # GraphH-style auto mode selection on a sample shard (§II-D-2)
             from .cache import select_cache_mode
 
-            sample = store.shard_bytes(0, "csr" if backend == "numpy" else "ell")
+            sample = store.shard_bytes(0, self._fmt)
             total = sum(
-                store.file_size(store.shard_name(p, "csr" if backend == "numpy" else "ell"))
+                store.file_size(store.shard_name(p, self._fmt))
                 for p in range(self.meta.num_shards)
             )
             cache_mode = select_cache_mode(sample, cache_bytes, total)
         self.cache = ShardCache(cache_bytes, cache_mode) if cache_bytes > 0 else None
-        self.bloom_fp = bloom_fp
         # Beyond-paper: keep decoded device-format shards resident (the
         # TPU analogue of "leave it in the cache" — skips host decode AND
         # host->device transfer on every revisit).
         self.device_resident = device_resident and backend in ("jnp", "pallas")
         self._device_shards = {}
-        self.filters: Optional[List[BloomFilter]] = None
-        self.exact_sources: Optional[List[np.ndarray]] = None
-        self._build_filters()
+
+        # ---- the three layers ------------------------------------------
+        self.scheduler = ShardScheduler(
+            self.meta,
+            selective=selective,
+            threshold=threshold,
+            bloom_fp=bloom_fp,
+            exact_selective=exact_selective,
+        )
+        self.scheduler.build_filters(
+            store, warm_cache=self.cache, cache_fmt=self._fmt
+        )
+        self.pipeline = ShardPipeline(
+            store,
+            self._fmt,
+            cache=self.cache,
+            depth=prefetch_depth,
+            resident=self._device_shards if self.device_resident else None,
+        )
+        self.executor = make_executor(backend, batch_shards=batch_shards)
 
     # ------------------------------------------------------------- factory
     @classmethod
@@ -273,52 +205,38 @@ class VSWEngine:
         """Which on-disk representation this backend consumes."""
         return "csr" if self.backend_name == "numpy" else "ell"
 
-    # ------------------------------------------------------------- filters
-    def _build_filters(self) -> None:
-        """Data-loading phase: scan shards once to build Bloom filters and
-        optionally warm the cache (paper §IV-B: 'during the data loading
-        phase, GraphMP scans all edges to construct Bloom filters, and
-        places processed shards in the cache if possible')."""
-        filters: List[BloomFilter] = []
-        exact: List[np.ndarray] = []
-        io0 = self.store.io.snapshot()  # loading-phase I/O isn't per-iteration
-        for p in range(self.meta.num_shards):
-            csr = self.store.decode_csr(p, self.store.shard_bytes(p, "csr"))
-            srcs = csr.unique_sources()
-            filters.append(BloomFilter.build(srcs, fp_rate=self.bloom_fp))
-            exact.append(srcs)
-            if self.cache is not None:
-                raw = self.store.shard_bytes(p, self._fmt) if self._fmt != "csr" \
-                    else self.store.shard_bytes(p, "csr")
-                self.cache.put(p, raw)
-        self.filters = filters
-        self.exact_sources = exact
-        self.loading_io = self.store.io - io0
+    # ----------------------------------------- compatibility accessors
+    @property
+    def selective(self) -> bool:
+        return self.scheduler.selective
 
-    # ---------------------------------------------------------------- load
-    def _load_shard(self, p: int):
-        """Returns (csr_or_None, ell_or_None) for the backend's format."""
-        if self.device_resident and p in self._device_shards:
-            return self._device_shards[p]
-        raw = self.cache.get(p) if self.cache is not None else None
-        if raw is None:
-            raw = self.store.shard_bytes(p, self._fmt)
-            if self.cache is not None:
-                self.cache.put(p, raw)
-        if self._fmt == "csr":
-            out = (self.store.decode_csr(p, raw), None)
-        else:
-            out = (None, self.store.decode_ell(p, raw))
-        if self.device_resident:
-            self._device_shards[p] = out
-        return out
+    @property
+    def threshold(self) -> float:
+        return self.scheduler.threshold
 
-    # ----------------------------------------------------------- scheduling
-    def _shard_is_active(self, p: int, active_ids: np.ndarray) -> bool:
-        if self.exact_selective:
-            srcs = self.exact_sources[p]
-            return bool(np.isin(active_ids, srcs, assume_unique=False).any())
-        return self.filters[p].any_member(active_ids)
+    @property
+    def exact_selective(self) -> bool:
+        return self.scheduler.exact_selective
+
+    @property
+    def bloom_fp(self) -> float:
+        return self.scheduler.bloom_fp
+
+    @property
+    def filters(self):
+        return self.scheduler.filters
+
+    @property
+    def exact_sources(self):
+        return self.scheduler.exact_sources
+
+    @property
+    def loading_io(self):
+        return self.scheduler.loading_io
+
+    def close(self) -> None:
+        """Shut down the prefetch thread pool (idempotent)."""
+        self.pipeline.close()
 
     # ------------------------------------------------------------------ run
     def run(
@@ -335,35 +253,30 @@ class VSWEngine:
         stats: List[IterStats] = []
         history = []
         converged = False
+        pstats = PipelineStats()
+        xstats = ExecStats()
 
         for it in range(max_iters):
             t0 = time.perf_counter()
             io0 = self.store.io.snapshot()
             cache_h0 = self.cache.stats.hits if self.cache else 0
             cache_m0 = self.cache.stats.misses if self.cache else 0
+            pstats.reset()
+            xstats.reset()
 
-            active_ratio = len(active_ids) / max(meta.num_vertices, 1)
-            use_selective = self.selective and active_ratio < self.threshold
-
+            plan = self.scheduler.plan(active_ids)
             msgs = program.pre(src_vals, meta.out_deg).astype(np.float32)
             dst_vals = src_vals.copy()  # carried over for skipped shards
-            processed = skipped = 0
 
-            for p in range(meta.num_shards):
-                if use_selective and not self._shard_is_active(p, active_ids):
-                    skipped += 1
-                    continue
-                csr, ell = self._load_shard(p)
-                ref = csr if csr is not None else ell
-                acc = self.backend(csr, ell, msgs, program.combine)
+            loaded = self.pipeline.iter_shards(plan.shards, stats=pstats)
+            for res in self.executor.run(loaded, msgs, program.combine, xstats):
                 new = program.apply(
-                    np.asarray(acc, dtype=src_vals.dtype),
-                    src_vals[ref.v0 : ref.v1],
+                    np.asarray(res.acc, dtype=src_vals.dtype),
+                    src_vals[res.v0: res.v1],
                     meta,
-                    ref.v0,
+                    res.v0,
                 )
-                dst_vals[ref.v0 : ref.v1] = new
-                processed += 1
+                dst_vals[res.v0: res.v1] = new
 
             new_active = program.is_active(dst_vals, src_vals)
             active_ids = np.flatnonzero(new_active).astype(np.int64)
@@ -374,8 +287,8 @@ class VSWEngine:
                 IterStats(
                     iteration=it,
                     time_s=time.perf_counter() - t0,
-                    shards_processed=processed,
-                    shards_skipped=skipped,
+                    shards_processed=plan.num_planned,
+                    shards_skipped=plan.num_skipped,
                     bytes_read=dio.bytes_read,
                     cache_hits=(self.cache.stats.hits - cache_h0) if self.cache else 0,
                     cache_misses=(self.cache.stats.misses - cache_m0)
@@ -383,7 +296,13 @@ class VSWEngine:
                     else 0,
                     active_count=len(active_ids),
                     active_ratio=len(active_ids) / max(meta.num_vertices, 1),
-                    selective_on=use_selective,
+                    selective_on=plan.selective_on,
+                    load_total_s=pstats.load_total_s,
+                    load_wait_s=pstats.wait_s,
+                    load_overlap_s=pstats.overlap_s,
+                    exec_s=xstats.exec_s,
+                    dispatches=xstats.dispatches,
+                    prefetch_depth=self.pipeline.depth,
                 )
             )
             if record_values_history:

@@ -4,17 +4,32 @@
 and the full message array, runs the Pallas partial kernel + the XLA
 segment combine, and returns per-destination accumulations.  It is the
 ``pallas`` backend of :class:`~repro.core.vsw.VSWEngine`.
+
+``ell_update_batched`` is the multi-shard entry point (DESIGN.md §4): N
+consecutive planned shards are concatenated into one grid — one
+``pallas_call`` whose scalar-prefetched ``tile_window`` map spans every
+tile of every shard against the same resident message table — followed by
+one globalized segment combine.  Per-shard dispatch overhead (trace cache
+lookup, argument staging, kernel launch) is paid once per batch instead of
+once per shard.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csr import EllShard
+from repro.core.csr import (
+    EllShard,
+    bucket_rows,
+    concat_ells,
+    next_pow2,
+    pad_ell_arrays,
+)
 
 from . import kernel as K
 
@@ -80,6 +95,45 @@ def ell_update(
         window=ext, tr=ell.tr, rows=ell.rows, combine=combine,
         variant=variant, interpret=interpret,
     )
+
+
+def ell_update_batched(
+    ells: Sequence[EllShard],
+    msgs: np.ndarray,
+    combine: str,
+    *,
+    interpret: bool = True,
+) -> List[np.ndarray]:
+    """Per-shard accumulators for N shards from ONE kernel dispatch.
+
+    Bitwise-equal to calling :func:`ell_update` per shard: the batch is a
+    pure concatenation — every tile computes the same partials it would
+    have computed alone, and the segment combine sees the same per-segment
+    contribution order (shards are concatenated in plan order, padding rows
+    contribute the combine identity).
+
+    Grid and segment shapes are pow2-bucketed: under selective scheduling
+    the batch composition changes every iteration, and unbucketed shapes
+    would trigger a retrace per distinct (n_ell, rows) pair.
+    """
+    if not ells:
+        return []
+    batch = concat_ells(ells)
+    n_ell_pad = bucket_rows(batch.n_ell, batch.tr)
+    idx, mask, seg, tw = pad_ell_arrays(
+        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
+        batch.n_ell, batch.tr, n_ell_pad,
+    )
+    msgs_p = np.zeros(batch.num_windows * batch.window, msgs.dtype)
+    msgs_p[: msgs.shape[0]] = msgs
+    acc = _update_jit(
+        jnp.asarray(idx), jnp.asarray(mask),
+        jnp.asarray(seg), jnp.asarray(tw),
+        jnp.asarray(msgs_p),
+        window=batch.window, tr=batch.tr, rows=next_pow2(batch.rows_total),
+        combine=combine, variant="masked", interpret=interpret,
+    )
+    return batch.split(np.asarray(acc))
 
 
 def ell_update_arrays(

@@ -1,0 +1,301 @@
+"""Tests for the layered engine: scheduler plans, pipelined prefetch, and
+batched multi-shard dispatch must be invisible in the results — every layer
+combination is bitwise-equal to the synchronous per-shard path."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import apps
+from repro.core.cache import ShardCache
+from repro.core.csr import concat_ells, csr_to_ell
+from repro.core.executor import (
+    BatchedEllExecutor,
+    PerShardExecutor,
+    make_executor,
+    update_shard_jnp,
+    update_shard_numpy,
+)
+from repro.core.graph import rmat_graph
+from repro.core.pipeline import PipelineStats, ShardPipeline
+from repro.core.scheduler import ShardScheduler
+from repro.core.sharding import preprocess
+from repro.core.storage import ShardStore
+from repro.core.vsw import VSWEngine
+
+
+def _mk_engine(tmp_path, tag, **kw):
+    g = kw.pop("graph", None)
+    if g is None:
+        g = rmat_graph(500, 6000, seed=21)
+    kw.setdefault("num_shards", 6)
+    kw.setdefault("window", 128)
+    kw.setdefault("k", 16)
+    return VSWEngine.from_graph(g, str(tmp_path / tag), **kw)
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("backend", ["numpy", "jnp"])
+@pytest.mark.parametrize("depth", [0, 1, 4])
+def test_prefetch_depth_preserves_values(tmp_path, backend, depth):
+    g = rmat_graph(500, 6000, seed=22)
+    progs = [(apps.pagerank(), 10), (apps.sssp(0), 60), (apps.wcc(), 60)]
+    ref_eng = _mk_engine(tmp_path, f"ref{backend}{depth}", graph=g,
+                         backend=backend, prefetch_depth=0)
+    eng = _mk_engine(tmp_path, f"d{backend}{depth}", graph=g,
+                     backend=backend, prefetch_depth=depth)
+    for prog, iters in progs:
+        ref = ref_eng.run(prog, max_iters=iters).values
+        got = eng.run(prog, max_iters=iters).values
+        assert np.array_equal(
+            np.nan_to_num(got, posinf=1e30), np.nan_to_num(ref, posinf=1e30)
+        ), (prog.name, backend, depth)
+    eng.close()
+    ref_eng.close()
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp", "pallas"])
+def test_batched_executor_bitwise_equals_per_shard(tmp_path, backend):
+    g = rmat_graph(400, 5000, seed=23)
+    per = _mk_engine(tmp_path, f"per{backend}", graph=g, backend=backend,
+                     batch_shards=1, prefetch_depth=0)
+    bat = _mk_engine(tmp_path, f"bat{backend}", graph=g, backend=backend,
+                     batch_shards=3, prefetch_depth=2)
+    for prog, iters in [(apps.pagerank(), 8), (apps.sssp(0), 40)]:
+        a = per.run(prog, max_iters=iters).values
+        b = bat.run(prog, max_iters=iters).values
+        assert np.array_equal(
+            np.nan_to_num(a, posinf=1e30), np.nan_to_num(b, posinf=1e30)
+        ), (prog.name, backend)
+    per.close()
+    bat.close()
+
+
+def test_batched_executor_reports_fewer_dispatches(tmp_path):
+    eng = _mk_engine(tmp_path, "disp", backend="jnp", batch_shards=3,
+                     prefetch_depth=2, selective=False)
+    r = eng.run(apps.pagerank(), max_iters=3)
+    for it in r.iterations:
+        assert it.shards_processed == 6
+        assert it.dispatches == 2  # ceil(6 / 3)
+    eng.close()
+
+
+def test_pipelined_cache_run_matches_and_counts(tmp_path):
+    g = rmat_graph(500, 8000, seed=24)
+    sync = _mk_engine(tmp_path, "sync", graph=g, backend="numpy",
+                      prefetch_depth=0, cache_bytes=1 << 24, cache_mode=3,
+                      selective=False)
+    pipe = _mk_engine(tmp_path, "pipe", graph=g, backend="numpy",
+                      prefetch_depth=4, cache_bytes=1 << 24, cache_mode=3,
+                      selective=False)
+    rs = sync.run(apps.pagerank(), max_iters=5)
+    rp = pipe.run(apps.pagerank(), max_iters=5)
+    assert np.array_equal(rs.values, rp.values)
+    # warmed cache: both run disk-free with identical hit accounting
+    assert rp.total_bytes_read == 0
+    for it_s, it_p in zip(rs.iterations, rp.iterations):
+        assert it_s.cache_hits == it_p.cache_hits == 6
+    pipe.close()
+    sync.close()
+
+
+def test_iterstats_overlap_accounting(tmp_path):
+    eng = _mk_engine(tmp_path, "ov", backend="numpy", prefetch_depth=4,
+                     selective=False, emulate_bw=20e6)
+    r = eng.run(apps.pagerank(), max_iters=3)
+    for it in r.iterations:
+        assert it.prefetch_depth == 4
+        assert it.load_total_s > 0
+        assert it.load_wait_s >= 0
+        assert abs(it.load_overlap_s -
+                   max(0.0, it.load_total_s - it.load_wait_s)) < 1e-9
+    # with 4 loader threads over a throttled store, some load latency must
+    # be hidden behind compute / other loads
+    assert r.total_load_overlap_s > 0
+    eng.close()
+
+
+# --------------------------------------------------------------- scheduler
+def test_scheduler_plan_matches_engine_semantics(tmp_path):
+    g = rmat_graph(600, 4000, seed=25)
+    eng = _mk_engine(tmp_path, "sched", graph=g, backend="numpy",
+                     num_shards=8, selective=True, threshold=0.5)
+    sched = eng.scheduler
+    # selective off above threshold: everything planned
+    many = np.arange(400, dtype=np.int64)
+    plan = sched.plan(many)
+    assert not plan.selective_on and plan.shards == list(range(8))
+    # tiny active set: plan == exactly the shards whose filter may match
+    few = np.array([3], dtype=np.int64)
+    plan = sched.plan(few)
+    assert plan.selective_on
+    assert plan.shards == [p for p in range(8) if sched.shard_is_active(p, few)]
+    assert sorted(plan.shards + plan.skipped) == list(range(8))
+    eng.close()
+
+
+def test_scheduler_bloom_plans_superset_of_exact(tmp_path):
+    g = rmat_graph(600, 4000, seed=26)
+    meta, shards = preprocess(g, num_shards=8)
+    store = ShardStore(str(tmp_path / "s"))
+    store.write_meta(meta)
+    for s in shards:
+        store.write_shard(s, num_vertices=meta.num_vertices, window=128,
+                          k=16, tr=8)
+    bloom = ShardScheduler(meta, threshold=1.0)
+    exact = ShardScheduler(meta, threshold=1.0, exact_selective=True)
+    bloom.build_filters(store)
+    exact.build_filters(store)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        ids = rng.choice(meta.num_vertices, size=3, replace=False).astype(np.int64)
+        pb, pe = bloom.plan(ids), exact.plan(ids)
+        assert set(pe.shards) <= set(pb.shards)  # no false negatives
+
+
+# ---------------------------------------------------------------- pipeline
+@pytest.mark.parametrize("depth", [0, 2])
+def test_pipeline_yields_plan_order_with_stats(tmp_path, depth):
+    g = rmat_graph(300, 3000, seed=27)
+    meta, shards = preprocess(g, num_shards=5)
+    store = ShardStore(str(tmp_path / "s"))
+    store.write_meta(meta)
+    for s in shards:
+        store.write_shard(s, num_vertices=meta.num_vertices, window=128,
+                          k=16, tr=8)
+    pipe = ShardPipeline(store, "csr", depth=depth)
+    stats = PipelineStats()
+    order = [3, 0, 4, 1]
+    out = [ls.shard_id for ls in pipe.iter_shards(order, stats=stats)]
+    assert out == order
+    assert stats.shards_loaded == 4
+    assert stats.load_total_s > 0
+    pipe.close()
+
+
+def test_shard_cache_thread_safety_hammer():
+    cache = ShardCache(1 << 16, mode=2)
+    blobs = {i: bytes([i % 251]) * (500 + 37 * i) for i in range(24)}
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(300):
+                i = int(rng.integers(0, 24))
+                got = cache.get(i)
+                if got is None:
+                    cache.put(i, blobs[i])
+                elif got != blobs[i]:
+                    errors.append((i, len(got)))
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert cache.stored_bytes <= cache.capacity_bytes
+    assert cache.stats.hits + cache.stats.misses == 8 * 300
+
+
+def test_store_bulk_and_async_reads(tmp_path):
+    from concurrent.futures import ThreadPoolExecutor
+
+    g = rmat_graph(300, 3000, seed=30)
+    meta, shards = preprocess(g, num_shards=4)
+    store = ShardStore(str(tmp_path / "s"))
+    store.write_meta(meta)
+    for s in shards:
+        store.write_shard(s, num_vertices=meta.num_vertices, window=128,
+                          k=16, tr=8)
+    io0 = store.io.snapshot()
+    serial = store.shard_bytes_bulk(range(4), "csr")
+    d1 = store.io - io0
+    assert d1.reads == 4 and d1.bytes_read == sum(len(b) for b in serial.values())
+    concurrent = store.shard_bytes_bulk(range(4), "csr", max_workers=4)
+    assert concurrent == serial  # same bytes, same accounting channel
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        fut = store.read_bytes_async(store.shard_name(2, "csr"), pool)
+        assert fut.result() == serial[2]
+    decoded = store.load_shards([1, 3], "csr")
+    assert decoded[1].shard_id == 1 and decoded[3].v1 == shards[3].v1
+
+
+def test_scheduler_warm_cache_reads_csr_bytes_once(tmp_path):
+    """The loading scan reuses the filter-scan bytes for cache warming when
+    the cached format IS csr — no double read of every shard."""
+    g = rmat_graph(300, 3000, seed=31)
+    meta, shards = preprocess(g, num_shards=4)
+    store = ShardStore(str(tmp_path / "s"))
+    store.write_meta(meta)
+    for s in shards:
+        store.write_shard(s, num_vertices=meta.num_vertices, window=128,
+                          k=16, tr=8)
+    cache = ShardCache(1 << 24, mode=1)
+    sched = ShardScheduler(meta)
+    sched.build_filters(store, warm_cache=cache, cache_fmt="csr")
+    assert sched.loading_io.reads == 4  # one accounted read per shard
+    assert len(cache) == 4
+
+
+# ---------------------------------------------------------------- executor
+def test_make_executor_selection():
+    assert isinstance(make_executor("numpy", batch_shards=4), PerShardExecutor)
+    assert isinstance(make_executor("jnp", batch_shards=1), PerShardExecutor)
+    assert isinstance(make_executor("pallas", batch_shards=4), BatchedEllExecutor)
+    with pytest.raises(ValueError):
+        make_executor("nope")
+
+
+def test_concat_ells_roundtrip():
+    g = rmat_graph(300, 4000, seed=28)
+    meta, shards = preprocess(g, num_shards=4)
+    ells = [csr_to_ell(s, meta.num_vertices, window=64, k=8, tr=8)
+            for s in shards]
+    batch = concat_ells(ells)
+    assert batch.rows_total == meta.num_vertices
+    assert batch.n_ell == sum(e.n_ell for e in ells)
+    assert batch.tile_window.shape[0] == sum(e.n_tiles for e in ells)
+    # globalized seg stays inside each shard's row interval
+    off = 0
+    r0 = 0
+    for e in ells:
+        seg = batch.seg[off: off + e.n_ell]
+        assert seg.min() >= r0 and seg.max() < r0 + e.rows
+        off += e.n_ell
+        r0 += e.rows
+    # split inverts concatenation
+    acc = np.arange(batch.rows_total, dtype=np.float32)
+    parts = batch.split(acc)
+    assert [len(p) for p in parts] == [e.rows for e in ells]
+
+
+def test_batched_shapes_are_bucketed():
+    """Batched dispatch must hit a bounded set of jit shapes even as the
+    batch composition changes (selective scheduling shrinks plans every
+    iteration)."""
+    from repro.core.csr import bucket_rows, next_pow2
+
+    # many nearby sizes collapse into few buckets
+    assert len({bucket_rows(n, 8) for n in range(8, 257, 8)}) <= 6
+    assert len({next_pow2(n) for n in range(1, 257)}) == 9
+    assert bucket_rows(24, 12) % 12 == 0 and bucket_rows(24, 12) >= 32
+
+
+def test_pad_ell_non_pow2_tile_rows(tmp_path):
+    """Regression: tile_window padding used floor division and broke
+    whenever the pow2 row padding wasn't a multiple of ``tr``."""
+    g = rmat_graph(200, 2500, seed=29)
+    meta, shards = preprocess(g, num_shards=2)
+    msgs = np.random.default_rng(0).random(meta.num_vertices).astype(np.float32)
+    for s in shards:
+        ell = csr_to_ell(s, meta.num_vertices, window=64, k=4, tr=12)
+        assert ell.n_ell % 12 == 0
+        oracle = update_shard_numpy(s, None, msgs, "sum")
+        got = update_shard_jnp(s, ell, msgs, "sum")
+        assert np.allclose(got, oracle, rtol=1e-5, atol=1e-9)

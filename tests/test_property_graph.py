@@ -1,8 +1,19 @@
-"""Hypothesis property tests on system invariants (spec requirement)."""
+"""Hypothesis property tests on system invariants (spec requirement).
+
+``hypothesis`` is optional (requirements.txt).  When it is missing, each
+property runs over a deterministic battery of seeded random graphs instead
+— same checks, fixed sampling — so ``pytest -x -q`` always collects.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import apps
 from repro.core.csr import csr_to_ell
@@ -10,19 +21,61 @@ from repro.core.graph import Graph, from_edge_list
 from repro.core.sharding import compute_intervals, preprocess
 from repro.core.vsw import VSWEngine, update_shard_numpy
 
+if HAVE_HYPOTHESIS:
 
-@st.composite
-def graphs(draw, max_v=60, max_e=300):
-    n = draw(st.integers(min_value=2, max_value=max_v))
-    m = draw(st.integers(min_value=1, max_value=max_e))
-    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
-    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
-    return Graph(n, np.array(src, np.int32), np.array(dst, np.int32))
+    @st.composite
+    def graphs(draw, max_v=60, max_e=300):
+        n = draw(st.integers(min_value=2, max_value=max_v))
+        m = draw(st.integers(min_value=1, max_value=max_e))
+        src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        return Graph(n, np.array(src, np.int32), np.array(dst, np.int32))
 
 
-@settings(max_examples=30, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(), st.integers(1, 6))
+def _seeded_graph(seed, max_v=60, max_e=300):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, max_v + 1))
+    m = int(rng.integers(1, max_e + 1))
+    return Graph(
+        n,
+        rng.integers(0, n, m).astype(np.int32),
+        rng.integers(0, n, m).astype(np.int32),
+    )
+
+
+def _property(arg_fn, n_examples, hyp_decorators):
+    """Decorate with hypothesis when available, else a seeded parametrize.
+
+    ``arg_fn(seed) -> tuple`` supplies the fallback example for one seed;
+    ``hyp_decorators`` is the (settings, given) pair used otherwise.
+    """
+
+    def deco(check):
+        if HAVE_HYPOTHESIS:
+            f = check
+            for d in reversed(hyp_decorators):
+                f = d(f)
+            return f
+
+        @pytest.mark.parametrize("seed", range(n_examples))
+        def wrapper(seed):
+            check(*arg_fn(seed))
+
+        wrapper.__name__ = check.__name__
+        return wrapper
+
+    return deco
+
+
+@_property(
+    lambda seed: (_seeded_graph(seed), 1 + seed % 6),
+    n_examples=30,
+    hyp_decorators=[
+        settings(max_examples=30, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(), st.integers(1, 6)),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_sharding_partitions_edges_exactly(g, p):
     meta, shards = preprocess(g, num_shards=p)
     assert sum(s.nnz for s in shards) == g.num_edges
@@ -36,9 +89,15 @@ def test_sharding_partitions_edges_exactly(g, p):
             )
 
 
-@settings(max_examples=25, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(), st.integers(4, 64), st.integers(2, 16))
+@_property(
+    lambda seed: (_seeded_graph(seed), 4 + (seed * 7) % 61, 2 + (seed * 3) % 15),
+    n_examples=25,
+    hyp_decorators=[
+        settings(max_examples=25, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(), st.integers(4, 64), st.integers(2, 16)),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_ell_preserves_edge_multiset(g, window, k):
     meta, shards = preprocess(g, num_shards=2)
     for s in shards:
@@ -52,9 +111,15 @@ def test_ell_preserves_edge_multiset(g, window, k):
         assert got == ref
 
 
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(max_v=40, max_e=150))
+@_property(
+    lambda seed: (_seeded_graph(seed, max_v=40, max_e=150),),
+    n_examples=15,
+    hyp_decorators=[
+        settings(max_examples=15, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(max_v=40, max_e=150)),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_pagerank_mass_conservation(g):
     """0 < sum(PR) <= 1 (dangling vertices leak mass; none is created)."""
     import tempfile
@@ -67,9 +132,15 @@ def test_pagerank_mass_conservation(g):
     assert 0.0 < total <= 1.0 + 1e-4
 
 
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(max_v=40, max_e=150))
+@_property(
+    lambda seed: (_seeded_graph(100 + seed, max_v=40, max_e=150),),
+    n_examples=15,
+    hyp_decorators=[
+        settings(max_examples=15, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(max_v=40, max_e=150)),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_sssp_triangle_inequality(g):
     """After convergence: dist[v] <= dist[u] + 1 for every edge (u, v)."""
     import tempfile
@@ -86,9 +157,15 @@ def test_sssp_triangle_inequality(g):
     assert ok.all()
 
 
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(max_v=40, max_e=150))
+@_property(
+    lambda seed: (_seeded_graph(200 + seed, max_v=40, max_e=150),),
+    n_examples=15,
+    hyp_decorators=[
+        settings(max_examples=15, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(max_v=40, max_e=150)),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_wcc_labels_are_fixed_point(g):
     """Converged labels: label[v] <= label[u] for every edge (u,v), and
     every label is the id of some vertex with that label (a root)."""
@@ -105,9 +182,15 @@ def test_wcc_labels_are_fixed_point(g):
     assert (lab <= np.arange(g.num_vertices)).all()
 
 
-@settings(max_examples=20, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graphs(), st.sampled_from(["sum", "min", "max"]))
+@_property(
+    lambda seed: (_seeded_graph(300 + seed), ["sum", "min", "max"][seed % 3]),
+    n_examples=20,
+    hyp_decorators=[
+        settings(max_examples=20, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow]),
+        given(graphs(), st.sampled_from(["sum", "min", "max"])),
+    ] if HAVE_HYPOTHESIS else [],
+)
 def test_update_shard_matches_dense(g, combine):
     meta, shards = preprocess(g, num_shards=3)
     msgs = np.random.default_rng(0).random(g.num_vertices).astype(np.float32)
