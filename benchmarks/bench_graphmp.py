@@ -12,11 +12,17 @@ Mapping to the paper:
   fig3_pipeline    — Fig. 3 / §II-C: pipelined (prefetching loader threads +
                      batched kernel dispatch) vs fully synchronous shard
                      processing on the cache-miss-heavy config.
+  fig_serve        — beyond-paper serving layer (repro/serve): queries/sec
+                     and bytes-read-per-query at lane budgets K ∈ {1, 4, 16}
+                     on the cache-miss-heavy config, plus the bitwise oracle
+                     check on a lane-batched result.
 
 Standalone usage (CI smoke mode)::
 
     PYTHONPATH=src python benchmarks/bench_graphmp.py --quick \
         --out BENCH_graphmp.json
+    PYTHONPATH=src python benchmarks/bench_graphmp.py fig_serve --quick \
+        --out BENCH_serve.json
 
 Graphs are synthetic RMAT (the paper's web graphs are power-law; RMAT
 matches the degree skew).  Scale is laptop-sized; the claims validated are
@@ -28,7 +34,7 @@ from __future__ import annotations
 
 import tempfile
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -236,15 +242,99 @@ def fig3_pipeline(rows: List[str], *, quick: bool = False) -> None:
         )
 
 
-def run(rows: List[str], *, quick: bool = False) -> None:
+def fig_serve(rows: List[str], *, quick: bool = False) -> None:
+    """GraphServe lane batching: throughput and per-query read volume at
+    lane budgets K ∈ {1, 4, 16} (ISSUE 2 acceptance).
+
+    Cache-miss-heavy config — no edge cache, no session cache, throttled
+    storage channel — so every planned shard pays a real (emulated-HDD)
+    read and the ONLY amortization is the lane batching itself.  The
+    workload is personalized PageRank (dense activity, fixed iteration
+    budget): K=1 degenerates to sequential single-query sweeps, so
+    bytes-read-per-query should drop ≈ K-fold at K lanes.  One K=16 result
+    is checked bitwise against a solo single-query oracle run.
+    """
+    from repro.serve import GraphService
+
+    if quick:
+        g = rmat_graph(5_000, 80_000, seed=6)
+        n_queries, iters, shards = 16, 3, 6
+    else:
+        g = _mk_graph(seed=6)
+        n_queries, iters, shards = 32, 5, SHARDS
+    rng = np.random.default_rng(7)
+    sources = rng.choice(g.num_vertices, size=n_queries,
+                         replace=False).astype(int)
+
+    bytes_per_query: Dict[int, float] = {}
+    for lanes in (1, 4, 16):
+        with tempfile.TemporaryDirectory() as d:
+            with GraphService.from_graph(
+                g, d, num_shards=shards, backend="numpy",
+                max_lanes=lanes, session_entries=0,
+                cache_bytes=0, emulate_bw=DISK_BW,
+            ) as svc:
+                t0 = time.perf_counter()
+                futs = [svc.submit("ppr", int(s), max_iters=iters)
+                        for s in sources]
+                results = [f.result() for f in futs]
+                wall = time.perf_counter() - t0
+                st = svc.stats()
+                bpq = st["bytes_read_total"] / n_queries
+                bytes_per_query[lanes] = bpq
+                rows.append(
+                    f"fig_serve_ppr_K{lanes},{wall / n_queries * 1e6:.0f},"
+                    f"qps={n_queries / wall:.2f}"
+                    f";bytes_per_query={bpq:.0f}"
+                    f";loads_per_query={st['loads_per_query']:.2f}"
+                    f";sweeps={st['sweeps']}"
+                )
+                if lanes == 16:
+                    batched_vals = results[0].values
+
+    # bitwise oracle: the K=16 lane-batched result vs a solo engine run
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=shards, backend="numpy")
+        solo = eng.run(apps.personalized_pagerank(source=int(sources[0])),
+                       max_iters=iters)
+        eng.close()
+    bitwise = bool(np.array_equal(batched_vals, solo.values))
+    amort = bytes_per_query[1] / max(bytes_per_query[16], 1e-9)
+    rows.append(
+        f"fig_serve_amortization,{amort:.2f},"
+        f"bytes_per_query_K1_over_K16={amort:.2f}x"
+        f";bitwise_oracle_K16={bitwise}"
+    )
+    assert bitwise, "lane-batched result diverged from single-query oracle"
+    assert amort >= 4.0, f"K=16 amortization {amort:.2f}x below 4x floor"
+
+
+SECTIONS = {
+    "fig5_selective": lambda rows, quick: fig5_selective(rows),
+    "fig8_10_engines": lambda rows, quick: fig8_10_engines(rows),
+    "fig11_memory": lambda rows, quick: fig11_memory(rows),
+    "table2_io": lambda rows, quick: table2_io(rows),
+    "fig3_pipeline": lambda rows, quick: fig3_pipeline(rows, quick=quick),
+    "fig_serve": lambda rows, quick: fig_serve(rows, quick=quick),
+}
+
+
+def run(rows: List[str], *, quick: bool = False,
+        sections: Optional[List[str]] = None) -> None:
+    if sections:
+        for name in sections:
+            if name not in SECTIONS:
+                raise SystemExit(
+                    f"unknown section {name!r}; have {sorted(SECTIONS)}"
+                )
+            SECTIONS[name](rows, quick)
+        return
     if quick:
         fig3_pipeline(rows, quick=True)
+        fig_serve(rows, quick=True)
         return
-    fig5_selective(rows)
-    fig8_10_engines(rows)
-    fig11_memory(rows)
-    table2_io(rows)
-    fig3_pipeline(rows)
+    for name in SECTIONS:
+        SECTIONS[name](rows, quick)
 
 
 def main() -> None:
@@ -253,15 +343,19 @@ def main() -> None:
     import json
 
     ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", metavar="section",
+                    help=f"benchmark sections to run (default: all, or the "
+                         f"smoke subset with --quick); one of "
+                         f"{sorted(SECTIONS)}")
     ap.add_argument("--quick", action="store_true",
-                    help="small graph, pipeline section only")
+                    help="small graphs, smoke subset (pipeline + serve)")
     ap.add_argument("--out", default=None,
                     help="also write rows as JSON to this path")
     args = ap.parse_args()
 
     rows: List[str] = []
     t0 = time.perf_counter()
-    run(rows, quick=args.quick)
+    run(rows, quick=args.quick, sections=args.sections or None)
     wall = time.perf_counter() - t0
     print("name,us_per_call,derived")
     for r in rows:

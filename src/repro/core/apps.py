@@ -27,7 +27,9 @@ from .sharding import GraphMeta
 
 __all__ = ["VertexProgram", "pagerank", "sssp", "wcc", "bfs",
            "personalized_pagerank", "degree_centrality", "get_program",
-           "COMBINE_IDENTITY"]
+           "COMBINE_IDENTITY",
+           "LaneProgram", "lane_bfs", "lane_sssp", "lane_ppr",
+           "get_lane_program", "LANE_PROGRAMS"]
 
 COMBINE_IDENTITY = {"sum": 0.0, "min": np.inf, "max": -np.inf}
 
@@ -166,6 +168,126 @@ def degree_centrality() -> VertexProgram:
         )
 
     return VertexProgram("degree", "sum", pre, apply, init)
+
+
+# --------------------------------------------------------------------------
+# Multi-lane (multi-query) programs — the serving layer's vertex API
+# --------------------------------------------------------------------------
+#
+# GraphServe (repro/serve/) executes K concurrent per-source queries as
+# *lanes* of one VSW sweep: vertex state becomes shape ``(K, n)`` and every
+# shard's gather+combine is applied to all K message rows at once.  A
+# :class:`LaneProgram` is the lane-dimensional counterpart of
+# :class:`VertexProgram`: ``pre``/``apply``/``is_active`` operate on 2-D
+# ``(K, n)`` arrays, elementwise-identical per lane to the single-source
+# program — which is what makes a lane sweep bitwise-equal to K independent
+# single-query runs (tests/test_serve.py).  Per-lane state (the source
+# vertex) is carried explicitly through ``apply`` so lanes can retire and be
+# backfilled mid-sweep without rebuilding closures.
+
+
+@dataclasses.dataclass
+class LaneProgram:
+    """One per-source graph application, vectorized over K query lanes.
+
+    Attributes:
+      combine:   monoid over in-edge messages (same as VertexProgram).
+      key:       batching-compatibility key — two requests may share a lane
+                 batch iff their programs have equal keys (same algebra AND
+                 same static parameters, e.g. PPR damping).
+      pre:       (vals [K, n], out_deg [n]) -> messages [K, n].
+      apply:     (acc [K, rows], old [K, rows], meta, v0, sources [K]) ->
+                 new [K, rows]; ``sources[k]`` is lane k's query source
+                 (-1 for free/padding lanes), for source-anchored programs.
+      init_lane: (meta, source) -> (vals [n], active [n]) for ONE lane —
+                 called at admission and again when a lane is backfilled.
+      is_active: (new, old) -> bool [K, n]; exact inequality as the paper.
+    """
+
+    name: str
+    combine: str
+    key: Tuple
+    pre: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    apply: Callable[..., np.ndarray]
+    init_lane: Callable[[GraphMeta, int], Tuple[np.ndarray, np.ndarray]]
+    is_active: Callable[[np.ndarray, np.ndarray], np.ndarray] = (
+        lambda new, old: new != old
+    )
+
+    @property
+    def identity(self) -> float:
+        return COMBINE_IDENTITY[self.combine]
+
+
+def _lane_min_distance(name: str) -> LaneProgram:
+    """Shared lane algebra of unit-weight SSSP / BFS levels."""
+
+    def pre(vals: np.ndarray, out_deg: np.ndarray) -> np.ndarray:
+        return vals + np.asarray(1.0, dtype=vals.dtype)
+
+    def apply(acc, old, meta, v0=0, sources=None):
+        return np.minimum(acc, old).astype(old.dtype)
+
+    def init_lane(meta: GraphMeta, source: int):
+        vals = np.full(meta.num_vertices, np.inf, dtype=np.float32)
+        vals[source] = 0.0
+        active = np.zeros(meta.num_vertices, dtype=bool)
+        active[source] = True
+        return vals, active
+
+    return LaneProgram(name, "min", (name,), pre, apply, init_lane)
+
+
+def lane_sssp() -> LaneProgram:
+    """Lane-vectorized unit-weight SSSP (one source per lane)."""
+    return _lane_min_distance("sssp")
+
+
+def lane_bfs() -> LaneProgram:
+    """Lane-vectorized BFS levels — identical algebra to unit-weight SSSP."""
+    return _lane_min_distance("bfs")
+
+
+def lane_ppr(damping: float = 0.85) -> LaneProgram:
+    """Lane-vectorized personalized PageRank: each lane's teleport mass
+    returns to that lane's source.  Op-for-op identical per lane to
+    :func:`personalized_pagerank` (same multiply, same in-place add at the
+    source slot) so lane sweeps stay bitwise-equal to single-query runs."""
+
+    def pre(vals: np.ndarray, out_deg: np.ndarray) -> np.ndarray:
+        return vals / np.maximum(out_deg, 1).astype(vals.dtype)
+
+    def apply(acc, old, meta, v0=0, sources=None):
+        out = (damping * acc).astype(old.dtype)
+        if sources is not None:
+            local = np.asarray(sources, dtype=np.int64) - v0
+            lanes = np.flatnonzero((local >= 0) & (local < out.shape[1]))
+            out[lanes, local[lanes]] += np.float32(1.0 - damping)
+        return out
+
+    def init_lane(meta: GraphMeta, source: int):
+        vals = np.zeros(meta.num_vertices, dtype=np.float32)
+        vals[source] = 1.0
+        return vals, np.ones(meta.num_vertices, dtype=bool)
+
+    return LaneProgram("ppr", "sum", ("ppr", float(damping)), pre, apply,
+                       init_lane)
+
+
+LANE_PROGRAMS: Dict[str, Callable[..., LaneProgram]] = {
+    "bfs": lane_bfs,
+    "sssp": lane_sssp,
+    "ppr": lane_ppr,
+}
+
+
+def get_lane_program(name: str, **kwargs) -> LaneProgram:
+    """Factory for lane-vectorized per-source programs (serving layer)."""
+    if name not in LANE_PROGRAMS:
+        raise KeyError(
+            f"unknown lane program {name!r}; have {sorted(LANE_PROGRAMS)}"
+        )
+    return LANE_PROGRAMS[name](**kwargs)
 
 
 _REGISTRY: Dict[str, Callable[..., VertexProgram]] = {

@@ -176,9 +176,14 @@ class EllBatch:
         return max(1, -(-self.num_vertices // self.window))
 
     def split(self, acc: np.ndarray) -> list:
-        """Slice a combined [rows_total] accumulator back per shard."""
+        """Slice a combined accumulator back per shard.
+
+        Rows are the trailing axis so both the single-query ``[rows_total]``
+        accumulator and the serving layer's lane-batched
+        ``[lanes, rows_total]`` accumulator split the same way.
+        """
         return [
-            acc[self.row_offsets[i]: self.row_offsets[i + 1]]
+            acc[..., self.row_offsets[i]: self.row_offsets[i + 1]]
             for i in range(len(self.shard_ids))
         ]
 

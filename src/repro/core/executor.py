@@ -47,14 +47,19 @@ from .sharding import ShardCSR
 
 __all__ = [
     "BACKENDS",
+    "LANE_BACKENDS",
     "ExecResult",
     "ExecStats",
     "PerShardExecutor",
     "BatchedEllExecutor",
     "make_executor",
+    "make_lane_executor",
     "update_shard_numpy",
     "update_shard_jnp",
     "update_shards_jnp_batched",
+    "update_shard_numpy_lanes",
+    "update_shard_jnp_lanes",
+    "update_shards_jnp_lanes_batched",
 ]
 
 
@@ -84,9 +89,13 @@ def update_shard_numpy(
     return acc
 
 
-@functools.lru_cache(maxsize=64)
-def _jnp_ell_fn(n_ell: int, k: int, tr: int, rows: int, window: int, combine: str):
-    """Build a jit'd ELL update for one padded shape bucket."""
+def _ell_fn_impl(tr: int, rows: int, window: int, combine: str):
+    """The pure (un-jitted) windowed-ELL update for one padded shape bucket.
+
+    Shared by the single-query path (jitted directly) and the serving
+    layer's lane path (jitted under ``vmap`` over the message axis) so both
+    trace the exact same per-lane computation.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -110,7 +119,59 @@ def _jnp_ell_fn(n_ell: int, k: int, tr: int, rows: int, window: int, combine: st
             acc = jnp.where(jnp.isfinite(acc), acc, jnp.asarray(ident, g.dtype))
         return acc
 
-    return jax.jit(fn)
+    return fn
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_ell_fn(n_ell: int, k: int, tr: int, rows: int, window: int, combine: str):
+    """Build a jit'd ELL update for one padded shape bucket."""
+    import jax
+
+    return jax.jit(_ell_fn_impl(tr, rows, window, combine))
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_ell_lanes_fn(
+    n_ell: int, k: int, tr: int, rows: int, window: int, combine: str
+):
+    """Lane-batched variant: one jit dispatch updates ``[lanes, ...]``
+    message rows against shared edge structure (lane count is a traced
+    shape; the serving batcher pads it to pow2 to bound retraces)."""
+    import jax
+
+    return jax.jit(
+        jax.vmap(_ell_fn_impl(tr, rows, window, combine),
+                 in_axes=(None, None, None, None, 0))
+    )
+
+
+def _padded_shard_inputs(ell: EllShard, msgs: np.ndarray):
+    """Shape-bucket one shard's ELL arrays and pad messages to full windows
+    (so the gather never reads OOB).  ``msgs`` may be 1-D (single query) or
+    2-D ``[lanes, |V|]`` — only the trailing (vertex) axis is padded.
+    Shared by the single-query and lane paths so the padding discipline
+    can't drift between them."""
+    n_ell_pad = bucket_rows(ell.n_ell, ell.tr)
+    idx, mask, seg, tw = pad_ell_arrays(
+        ell.ell_idx, ell.ell_mask, ell.seg, ell.tile_window,
+        ell.n_ell, ell.tr, n_ell_pad,
+    )
+    n_pad_v = ell.num_windows * ell.window
+    pad = [(0, 0)] * (msgs.ndim - 1) + [(0, n_pad_v - msgs.shape[-1])]
+    return n_ell_pad, idx, mask, seg, tw, np.pad(msgs, pad)
+
+
+def _padded_batch_inputs(ells: List[EllShard], msgs: np.ndarray):
+    """Batch-level counterpart of :func:`_padded_shard_inputs`."""
+    batch = concat_ells(ells)
+    n_ell_pad = bucket_rows(batch.n_ell, batch.tr)
+    idx, mask, seg, tw = pad_ell_arrays(
+        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
+        batch.n_ell, batch.tr, n_ell_pad,
+    )
+    n_pad_v = batch.num_windows * batch.window
+    pad = [(0, 0)] * (msgs.ndim - 1) + [(0, n_pad_v - msgs.shape[-1])]
+    return batch, n_ell_pad, idx, mask, seg, tw, np.pad(msgs, pad)
 
 
 def update_shard_jnp(
@@ -119,16 +180,8 @@ def update_shard_jnp(
     """Windowed-ELL gather/combine under jit (shape-bucketed)."""
     import jax.numpy as jnp
 
-    n_ell_pad = bucket_rows(ell.n_ell, ell.tr)
-    rows = ell.rows
-    idx, mask, seg, tw = pad_ell_arrays(
-        ell.ell_idx, ell.ell_mask, ell.seg, ell.tile_window,
-        ell.n_ell, ell.tr, n_ell_pad,
-    )
-    # Pad msgs to full windows so gather never reads OOB.
-    n_pad_v = ell.num_windows * ell.window
-    msgs_p = np.pad(msgs, (0, n_pad_v - msgs.shape[0]))
-    fn = _jnp_ell_fn(n_ell_pad, ell.k, ell.tr, rows, ell.window, combine)
+    n_ell_pad, idx, mask, seg, tw, msgs_p = _padded_shard_inputs(ell, msgs)
+    fn = _jnp_ell_fn(n_ell_pad, ell.k, ell.tr, ell.rows, ell.window, combine)
     acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
              jnp.asarray(tw), jnp.asarray(msgs_p))
     return np.asarray(acc)
@@ -151,17 +204,12 @@ def update_shards_jnp_batched(
 
     if not ells:
         return []
-    batch = concat_ells(ells)
-    tr = batch.tr
-    n_ell_pad = bucket_rows(batch.n_ell, tr)
-    idx, mask, seg, tw = pad_ell_arrays(
-        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
-        batch.n_ell, tr, n_ell_pad,
+    batch, n_ell_pad, idx, mask, seg, tw, msgs_p = _padded_batch_inputs(
+        ells, msgs
     )
-    n_pad_v = batch.num_windows * batch.window
-    msgs_p = np.pad(msgs, (0, n_pad_v - msgs.shape[0]))
     rows_pad = next_pow2(batch.rows_total)
-    fn = _jnp_ell_fn(n_ell_pad, batch.k, tr, rows_pad, batch.window, combine)
+    fn = _jnp_ell_fn(n_ell_pad, batch.k, batch.tr, rows_pad, batch.window,
+                     combine)
     acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
              jnp.asarray(tw), jnp.asarray(msgs_p))
     return batch.split(np.asarray(acc))
@@ -183,6 +231,74 @@ def _update_shards_pallas_batched(
     return [np.asarray(a) for a in spmv_ops.ell_update_batched(ells, msgs, combine)]
 
 
+# --------------------------------------------------------------------------
+# Lane-batched backends (serving layer): msgs is [lanes, |V|], acc is
+# [lanes, rows].  One shard load feeds every in-flight query lane.
+# --------------------------------------------------------------------------
+
+
+def update_shard_numpy_lanes(
+    csr: ShardCSR, ell: Optional[EllShard], msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    """Lane-stacked scatter-reduce oracle: runs :func:`update_shard_numpy`
+    per lane, so each lane's row is bitwise THE single-query oracle."""
+    return np.stack(
+        [update_shard_numpy(csr, ell, msgs[l], combine)
+         for l in range(msgs.shape[0])]
+    )
+
+
+def update_shard_jnp_lanes(
+    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    """Windowed-ELL gather/combine for all lanes under ONE jit dispatch."""
+    import jax.numpy as jnp
+
+    n_ell_pad, idx, mask, seg, tw, msgs_p = _padded_shard_inputs(ell, msgs)
+    fn = _jnp_ell_lanes_fn(n_ell_pad, ell.k, ell.tr, ell.rows, ell.window,
+                           combine)
+    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+             jnp.asarray(tw), jnp.asarray(msgs_p))
+    return np.asarray(acc)
+
+
+def update_shards_jnp_lanes_batched(
+    ells: List[EllShard], msgs: np.ndarray, combine: str
+) -> List[np.ndarray]:
+    """One jit dispatch for N concatenated shards x K lanes (jnp backend) —
+    same shape-bucketing discipline as :func:`update_shards_jnp_batched`."""
+    import jax.numpy as jnp
+
+    if not ells:
+        return []
+    batch, n_ell_pad, idx, mask, seg, tw, msgs_p = _padded_batch_inputs(
+        ells, msgs
+    )
+    rows_pad = next_pow2(batch.rows_total)
+    fn = _jnp_ell_lanes_fn(n_ell_pad, batch.k, batch.tr, rows_pad,
+                           batch.window, combine)
+    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+             jnp.asarray(tw), jnp.asarray(msgs_p))
+    return batch.split(np.asarray(acc))
+
+
+def _update_shard_pallas_lanes(
+    csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
+) -> np.ndarray:
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return np.asarray(spmv_ops.ell_update_lanes(ell, msgs, combine))
+
+
+def _update_shards_pallas_lanes_batched(
+    ells: List[EllShard], msgs: np.ndarray, combine: str
+) -> List[np.ndarray]:
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return [np.asarray(a)
+            for a in spmv_ops.ell_update_lanes_batched(ells, msgs, combine)]
+
+
 BACKENDS: Dict[str, Callable] = {
     "numpy": update_shard_numpy,
     "jnp": update_shard_jnp,
@@ -192,6 +308,17 @@ BACKENDS: Dict[str, Callable] = {
 _BATCHED_BACKENDS: Dict[str, Callable] = {
     "jnp": update_shards_jnp_batched,
     "pallas": _update_shards_pallas_batched,
+}
+
+LANE_BACKENDS: Dict[str, Callable] = {
+    "numpy": update_shard_numpy_lanes,
+    "jnp": update_shard_jnp_lanes,
+    "pallas": _update_shard_pallas_lanes,
+}
+
+_BATCHED_LANE_BACKENDS: Dict[str, Callable] = {
+    "jnp": update_shards_jnp_lanes_batched,
+    "pallas": _update_shards_pallas_lanes_batched,
 }
 
 
@@ -225,13 +352,20 @@ class ExecStats:
 
 
 class PerShardExecutor:
-    """One backend call per loaded shard (paper worker model)."""
+    """One backend call per loaded shard (paper worker model).
 
-    def __init__(self, backend: str):
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend}; have {sorted(BACKENDS)}")
+    With ``lanes=True`` the call consumes ``[lanes, |V|]`` messages and
+    yields ``[lanes, rows]`` accumulators — the serving layer's per-shard
+    amortization (one load, K lanes).
+    """
+
+    def __init__(self, backend: str, *, lanes: bool = False):
+        table = LANE_BACKENDS if lanes else BACKENDS
+        if backend not in table:
+            raise ValueError(f"unknown backend {backend}; have {sorted(table)}")
         self.backend_name = backend
-        self._fn = BACKENDS[backend]
+        self.lanes = lanes
+        self._fn = table[backend]
 
     def run(
         self,
@@ -252,10 +386,16 @@ class PerShardExecutor:
 
 
 class BatchedEllExecutor:
-    """Batch consecutive planned ELL shards into one kernel dispatch."""
+    """Batch consecutive planned ELL shards into one kernel dispatch.
 
-    def __init__(self, backend: str, batch_shards: int = 4):
-        if backend not in _BATCHED_BACKENDS:
+    With ``lanes=True`` each dispatch covers N shards x K query lanes —
+    the serving hot loop's maximal amortization point.
+    """
+
+    def __init__(self, backend: str, batch_shards: int = 4, *,
+                 lanes: bool = False):
+        table = _BATCHED_LANE_BACKENDS if lanes else _BATCHED_BACKENDS
+        if backend not in table:
             raise ValueError(
                 f"batched execution needs an ELL backend, got {backend!r}"
             )
@@ -263,7 +403,8 @@ class BatchedEllExecutor:
             raise ValueError("batch_shards must be >= 1")
         self.backend_name = backend
         self.batch_shards = batch_shards
-        self._fn = _BATCHED_BACKENDS[backend]
+        self.lanes = lanes
+        self._fn = table[backend]
 
     def run(
         self,
@@ -303,3 +444,13 @@ def make_executor(backend: str, *, batch_shards: int = 1):
     if batch_shards > 1 and backend in _BATCHED_BACKENDS:
         return BatchedEllExecutor(backend, batch_shards)
     return PerShardExecutor(backend)
+
+
+def make_lane_executor(backend: str, *, batch_shards: int = 1):
+    """Executor whose dispatches carry a lane (concurrent-query) axis:
+    same selection rule as :func:`make_executor`."""
+    if batch_shards < 1:
+        raise ValueError("batch_shards must be >= 1")
+    if batch_shards > 1 and backend in _BATCHED_LANE_BACKENDS:
+        return BatchedEllExecutor(backend, batch_shards, lanes=True)
+    return PerShardExecutor(backend, lanes=True)

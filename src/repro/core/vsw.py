@@ -235,8 +235,15 @@ class VSWEngine:
         return self.scheduler.loading_io
 
     def close(self) -> None:
-        """Shut down the prefetch thread pool (idempotent)."""
+        """Shut down the prefetch thread pool.  Idempotent: safe to call
+        any number of times, including after a context-manager exit."""
         self.pipeline.close()
+
+    def __enter__(self) -> "VSWEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ run
     def run(

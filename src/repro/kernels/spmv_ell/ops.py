@@ -36,6 +36,14 @@ from . import kernel as K
 IDENTITY = K.IDENTITY
 
 
+def _segment_combine(part, seg, rows, combine):
+    if combine == "sum":
+        return jax.ops.segment_sum(part, seg, num_segments=rows)
+    if combine == "min":
+        return jax.ops.segment_min(part, seg, num_segments=rows)
+    return jax.ops.segment_max(part, seg, num_segments=rows)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("window", "tr", "rows", "combine", "variant", "interpret"),
@@ -54,11 +62,36 @@ def _update_jit(
             ell_idx, tile_window, msgs,
             window=window, tr=tr, combine=combine, interpret=interpret,
         )
-    if combine == "sum":
-        return jax.ops.segment_sum(part, seg, num_segments=rows)
-    if combine == "min":
-        return jax.ops.segment_min(part, seg, num_segments=rows)
-    return jax.ops.segment_max(part, seg, num_segments=rows)
+    return _segment_combine(part, seg, rows, combine)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tr", "rows", "combine", "interpret")
+)
+def _update_lanes_jit(
+    ell_idx, ell_valid, seg, tile_window, msgs2d,
+    *, window, tr, rows, combine, interpret,
+):
+    """Lane-batched update: ONE traced computation covering every lane.
+
+    ``msgs2d`` is ``[lanes, num_windows * window]`` — one message row per
+    in-flight query.  The edge structure (idx/mask/seg/tile_window) is
+    shared by all lanes, so the whole partials+combine pipeline is vmapped
+    over the message axis (``pallas_call`` supports vmap; the lane count is
+    a static shape the serving batcher pads to a power of two to bound
+    retraces).  Each lane's slice runs the exact computation
+    :func:`_update_jit` would run for it alone — the bitwise-equality
+    contract of the serving layer (DESIGN.md §6).
+    """
+
+    def one_lane(msgs):
+        part = K.ell_partials_masked(
+            ell_idx, ell_valid, tile_window, msgs,
+            window=window, tr=tr, combine=combine, interpret=interpret,
+        )
+        return _segment_combine(part, seg, rows, combine)
+
+    return jax.vmap(one_lane)(msgs2d)
 
 
 def ell_update(
@@ -97,6 +130,18 @@ def ell_update(
     )
 
 
+def _prep_batch(ells: Sequence[EllShard]):
+    """Concatenate + shape-bucket a shard batch (shared by the single-query
+    and lane-batched entry points so the padding discipline can't drift)."""
+    batch = concat_ells(ells)
+    n_ell_pad = bucket_rows(batch.n_ell, batch.tr)
+    idx, mask, seg, tw = pad_ell_arrays(
+        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
+        batch.n_ell, batch.tr, n_ell_pad,
+    )
+    return batch, idx, mask, seg, tw
+
+
 def ell_update_batched(
     ells: Sequence[EllShard],
     msgs: np.ndarray,
@@ -118,12 +163,7 @@ def ell_update_batched(
     """
     if not ells:
         return []
-    batch = concat_ells(ells)
-    n_ell_pad = bucket_rows(batch.n_ell, batch.tr)
-    idx, mask, seg, tw = pad_ell_arrays(
-        batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
-        batch.n_ell, batch.tr, n_ell_pad,
-    )
+    batch, idx, mask, seg, tw = _prep_batch(ells)
     msgs_p = np.zeros(batch.num_windows * batch.window, msgs.dtype)
     msgs_p[: msgs.shape[0]] = msgs
     acc = _update_jit(
@@ -132,6 +172,60 @@ def ell_update_batched(
         jnp.asarray(msgs_p),
         window=batch.window, tr=batch.tr, rows=next_pow2(batch.rows_total),
         combine=combine, variant="masked", interpret=interpret,
+    )
+    return batch.split(np.asarray(acc))
+
+
+def ell_update_lanes(
+    ell: EllShard,
+    msgs: np.ndarray,  # [lanes, |V|]
+    combine: str,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """acc[lanes, rows] for one shard against ``lanes`` message rows.
+
+    The serving layer's per-shard entry point: one dispatch applies the
+    shard to every in-flight query lane, so a shard's load+decode cost is
+    amortized K ways (ISSUE: lane-batched VSW sweeps).
+    """
+    if msgs.ndim != 2:
+        raise ValueError(f"lane update needs [lanes, |V|] messages, got {msgs.shape}")
+    nw = ell.num_windows
+    msgs_p = np.zeros((msgs.shape[0], nw * ell.window), msgs.dtype)
+    msgs_p[:, : msgs.shape[1]] = msgs
+    return _update_lanes_jit(
+        jnp.asarray(ell.ell_idx), jnp.asarray(ell.ell_mask),
+        jnp.asarray(ell.seg), jnp.asarray(ell.tile_window),
+        jnp.asarray(msgs_p),
+        window=ell.window, tr=ell.tr, rows=ell.rows, combine=combine,
+        interpret=interpret,
+    )
+
+
+def ell_update_lanes_batched(
+    ells: Sequence[EllShard],
+    msgs: np.ndarray,  # [lanes, |V|]
+    combine: str,
+    *,
+    interpret: bool = True,
+) -> List[np.ndarray]:
+    """Per-shard ``[lanes, rows]`` accumulators for N shards x K lanes from
+    ONE dispatch — the serving hot loop's maximal amortization point: the
+    batch's edge bytes are decoded once and reused by every lane."""
+    if msgs.ndim != 2:
+        raise ValueError(f"lane update needs [lanes, |V|] messages, got {msgs.shape}")
+    if not ells:
+        return []
+    batch, idx, mask, seg, tw = _prep_batch(ells)
+    msgs_p = np.zeros((msgs.shape[0], batch.num_windows * batch.window), msgs.dtype)
+    msgs_p[:, : msgs.shape[1]] = msgs
+    acc = _update_lanes_jit(
+        jnp.asarray(idx), jnp.asarray(mask),
+        jnp.asarray(seg), jnp.asarray(tw),
+        jnp.asarray(msgs_p),
+        window=batch.window, tr=batch.tr, rows=next_pow2(batch.rows_total),
+        combine=combine, interpret=interpret,
     )
     return batch.split(np.asarray(acc))
 

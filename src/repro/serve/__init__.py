@@ -1,0 +1,43 @@
+"""GraphServe: concurrent multi-query serving on a warm VSW engine.
+
+The paper's VSW model makes ONE sweep I/O-optimal; this package amortizes
+that sweep across queries.  K concurrent per-source queries (BFS / SSSP /
+personalized PageRank) execute as *lanes* of one sweep: vertex state is
+``(K, n)``, each shard is loaded and decoded once per iteration and applied
+to every lane in a single batched dispatch, so the expected read volume per
+query drops from ``θ·D·|E|`` to ``≈ θ·D·|E| / K`` (DESIGN.md §6).
+
+Layers (bottom-up):
+
+==========  ===============================================================
+sweep       :class:`~repro.serve.sweep.LaneSweep` — drives the engine's
+            scheduler/pipeline with lane-dimensional executors; lanes
+            retire on convergence and are backfilled mid-flight.
+batcher     :class:`~repro.serve.batcher.LaneBatcher` — groups compatible
+            requests (same vertex program + static params) into lane
+            batches, padded to pow2 lane counts to bound recompiles.
+session     :class:`~repro.serve.session.SessionCache` — LRU result cache
+            keyed by (program, source, graph-version).
+service     :class:`~repro.serve.service.GraphService` — request queue,
+            admission by lane budget, worker thread, per-request
+            latency / I/O attribution.
+==========  ===============================================================
+"""
+
+from .batcher import LaneBatcher, pad_lanes
+from .service import GraphService, QueryResult, ServiceOverloaded
+from .session import SessionCache
+from .sweep import LaneResult, LaneSeed, LaneSweep, SweepIterStats
+
+__all__ = [
+    "GraphService",
+    "QueryResult",
+    "ServiceOverloaded",
+    "LaneBatcher",
+    "pad_lanes",
+    "SessionCache",
+    "LaneSweep",
+    "LaneSeed",
+    "LaneResult",
+    "SweepIterStats",
+]

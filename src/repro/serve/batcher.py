@@ -1,0 +1,73 @@
+"""Lane batching: group compatible requests, pad lane counts to pow2.
+
+Two requests may ride the same sweep iff their lane programs are
+*compatible* — equal :attr:`~repro.core.apps.LaneProgram.key`, i.e. the
+same algebra AND the same static parameters (a damping=0.85 PPR cannot
+share a lane matrix with damping=0.9).  The batcher scans the pending deque
+FIFO, takes up to ``max_lanes`` requests matching the oldest request's key,
+and leaves everything else queued in order — no starvation: the oldest
+request always defines the next batch.
+
+Lane counts are padded to the next power of two
+(:func:`pad_lanes`) so the jit'd lane kernels see a bounded set of shapes
+— at most ``log2(max_lanes)+1`` lane extents, mirroring the shape-bucketing
+of the batched shard dispatch (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, List
+
+from repro.core.csr import next_pow2
+
+__all__ = ["pad_lanes", "LaneBatcher"]
+
+
+def pad_lanes(n: int) -> int:
+    """Padded lane capacity for a batch of ``n`` requests (pow2, >= 1)."""
+    return next_pow2(max(n, 1))
+
+
+class LaneBatcher:
+    """Forms lane batches from a FIFO of pending requests.
+
+    Pending entries are duck-typed: anything with a ``key`` attribute
+    (the service uses its internal ``_Pending`` records).  The caller owns
+    the deque's lock — the batcher only mutates, never blocks.
+    """
+
+    def __init__(self, max_lanes: int = 16, *, pad_pow2: bool = True):
+        if max_lanes < 1:
+            raise ValueError("max_lanes must be >= 1")
+        self.max_lanes = max_lanes
+        self.pad_pow2 = pad_pow2
+
+    def capacity(self, batch_size: int) -> int:
+        """Lane-matrix extent allocated for a batch of ``batch_size``."""
+        return pad_lanes(batch_size) if self.pad_pow2 else max(batch_size, 1)
+
+    def take_compatible(
+        self, pending: Deque[Any], key: Any, limit: int
+    ) -> List[Any]:
+        """Remove and return up to ``limit`` entries whose key equals
+        ``key``, preserving the relative order of everything left queued."""
+        if limit <= 0 or not pending:
+            return []
+        taken: List[Any] = []
+        keep: List[Any] = []
+        while pending:
+            item = pending.popleft()
+            if len(taken) < limit and item.key == key:
+                taken.append(item)
+            else:
+                keep.append(item)
+        pending.extend(keep)
+        return taken
+
+    def form(self, pending: Deque[Any]) -> List[Any]:
+        """Take the next batch: the oldest request plus up to
+        ``max_lanes - 1`` compatible followers."""
+        if not pending:
+            return []
+        return self.take_compatible(pending, pending[0].key, self.max_lanes)

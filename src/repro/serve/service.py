@@ -1,0 +1,335 @@
+"""GraphService: a warm, concurrent multi-query serving front end.
+
+One resident :class:`~repro.core.vsw.VSWEngine` (Bloom filters built once,
+cache warm, prefetch pool up) answers a stream of per-source queries.
+Callers ``submit()`` from any thread and get a ``Future``; a single serve
+worker groups compatible requests into lane batches
+(:class:`~repro.serve.batcher.LaneBatcher`), runs them as one lane-batched
+VSW sweep (:class:`~repro.serve.sweep.LaneSweep`), and resolves each future
+the moment its lane retires — queries admitted together share every shard
+load, and lanes freed by early convergence are backfilled from the queue
+mid-sweep.
+
+Admission control is the lane budget: at most ``max_lanes`` queries ride
+one sweep, and (optionally) at most ``max_pending`` may queue —
+:class:`ServiceOverloaded` is the back-pressure signal.  Finished results
+land in a :class:`~repro.serve.session.SessionCache` keyed by
+(program, source, graph-version), so repeat queries bypass the queue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.apps import LaneProgram, get_lane_program
+from repro.core.graph import Graph
+from repro.core.vsw import VSWEngine
+
+from .batcher import LaneBatcher
+from .session import SessionCache
+from .sweep import LaneResult, LaneSeed, LaneSweep
+
+__all__ = ["GraphService", "QueryResult", "ServiceOverloaded"]
+
+
+class ServiceOverloaded(RuntimeError):
+    """Raised by ``submit`` when the pending queue is at its admission cap."""
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One answered query plus its attributed cost."""
+
+    request_id: int
+    program: str
+    source: int
+    values: np.ndarray  # [n] final vertex values
+    iterations: int
+    converged: bool
+    latency_s: float  # submit -> future resolution
+    bytes_read: float  # this query's share of sweep disk bytes
+    shard_loads: float  # this query's share of shard fetches
+    lanes: int  # lane capacity of the sweep that served it
+    cached: bool = False  # served from the session cache
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Queue entry; doubles as the sweep's lane token."""
+
+    request_id: int
+    program: str
+    source: int
+    max_iters: int
+    prog: LaneProgram
+    future: "Future[QueryResult]"
+    t_submit: float
+
+    @property
+    def key(self) -> Tuple:
+        return self.prog.key
+
+
+class GraphService:
+    """Serve concurrent BFS / SSSP / PPR queries from one warm engine."""
+
+    def __init__(
+        self,
+        engine: VSWEngine,
+        *,
+        max_lanes: int = 16,
+        pad_pow2: bool = True,
+        batch_shards: int = 1,
+        session_entries: int = 256,
+        max_pending: Optional[int] = None,
+        graph_version: int = 0,
+    ):
+        self.engine = engine
+        self.batcher = LaneBatcher(max_lanes, pad_pow2=pad_pow2)
+        self.sessions = SessionCache(session_entries)
+        self.batch_shards = batch_shards
+        self.max_pending = max_pending
+        self.graph_version = graph_version
+
+        self._pending: Deque[_Pending] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._engine_closed = False
+        self._ids = itertools.count()
+        # aggregate counters (worker-thread writes, snapshot under the lock)
+        self._queries_done = 0
+        self._sweeps = 0
+        self._bytes_read = 0.0
+        self._shard_loads = 0.0
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="graphserve-worker", daemon=True
+        )
+        self._worker.start()
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def from_graph(
+        cls,
+        graph: Graph,
+        root: str,
+        *,
+        max_lanes: int = 16,
+        pad_pow2: bool = True,
+        batch_shards: int = 1,
+        session_entries: int = 256,
+        max_pending: Optional[int] = None,
+        **engine_kwargs,
+    ) -> "GraphService":
+        """Preprocess ``graph`` into ``root``, warm an engine, start serving."""
+        engine = VSWEngine.from_graph(graph, root, **engine_kwargs)
+        return cls(
+            engine,
+            max_lanes=max_lanes,
+            pad_pow2=pad_pow2,
+            batch_shards=batch_shards,
+            session_entries=session_entries,
+            max_pending=max_pending,
+        )
+
+    # -------------------------------------------------------------- submit
+    def submit(
+        self,
+        program: str,
+        source: int,
+        *,
+        max_iters: int = 100,
+        **params,
+    ) -> "Future[QueryResult]":
+        """Queue one query; the future resolves when its lane retires.
+
+        Session-cache hits resolve immediately without occupying a lane.
+        Raises :class:`ServiceOverloaded` when ``max_pending`` is reached.
+        """
+        if self._closed:
+            raise RuntimeError("GraphService is closed")
+        if not (0 <= source < self.engine.meta.num_vertices):
+            raise ValueError(f"source {source} out of range")
+        prog = get_lane_program(program, **params)
+        t0 = time.perf_counter()
+        fut: "Future[QueryResult]" = Future()
+
+        cache_key = (prog.key, int(source), self.graph_version)
+        # A cached result answers this request iff it converged within the
+        # budget or ran exactly the requested budget; an unsuitable entry
+        # counts as a miss (the query re-runs on a lane).
+        cached = self.sessions.get(
+            cache_key,
+            lambda c: (c.converged and c.iterations <= max_iters)
+            or c.iterations == max_iters,
+        )
+        if cached is not None:
+            fut.set_result(
+                dataclasses.replace(
+                    cached,
+                    request_id=next(self._ids),
+                    values=cached.values.copy(),
+                    latency_s=time.perf_counter() - t0,
+                    bytes_read=0.0,
+                    shard_loads=0.0,
+                    cached=True,
+                )
+            )
+            return fut
+
+        entry = _Pending(
+            request_id=next(self._ids),
+            program=program,
+            source=int(source),
+            max_iters=max_iters,
+            prog=prog,
+            future=fut,
+            t_submit=t0,
+        )
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("GraphService is closed")
+            if (
+                self.max_pending is not None
+                and len(self._pending) >= self.max_pending
+            ):
+                raise ServiceOverloaded(
+                    f"pending queue at admission cap ({self.max_pending})"
+                )
+            self._pending.append(entry)
+            self._cond.notify_all()
+        return fut
+
+    def query(
+        self, program: str, source: int, *, max_iters: int = 100, **params
+    ) -> QueryResult:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(
+            program, source, max_iters=max_iters, **params
+        ).result()
+
+    # --------------------------------------------------------- worker loop
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if not self._pending and self._closed:
+                    return
+                batch = self.batcher.form(self._pending)
+            if batch:
+                self._run_batch(batch)
+
+    def _run_batch(self, batch: List[_Pending]) -> None:
+        prog = batch[0].prog
+        key = batch[0].key
+        capacity = self.batcher.capacity(len(batch))
+        resolved: set = set()
+        admitted: List[_Pending] = list(batch)  # incl. mid-sweep backfills
+
+        def backfill(n_free: int) -> List[LaneSeed]:
+            with self._cond:
+                taken = self.batcher.take_compatible(self._pending, key, n_free)
+            admitted.extend(taken)
+            return [
+                LaneSeed(source=p.source, max_iters=p.max_iters, token=p)
+                for p in taken
+            ]
+
+        def on_retire(res: LaneResult) -> None:
+            p: _Pending = res.token
+            qr = QueryResult(
+                request_id=p.request_id,
+                program=p.program,
+                source=p.source,
+                values=res.values,
+                iterations=res.iterations,
+                converged=res.converged,
+                latency_s=time.perf_counter() - p.t_submit,
+                bytes_read=res.bytes_read,
+                shard_loads=res.shard_loads,
+                lanes=capacity,
+            )
+            # Cache a private copy: the caller owns ``qr.values`` and may
+            # mutate it; later hits must still see the computed result.
+            self.sessions.put(
+                (p.prog.key, p.source, self.graph_version),
+                dataclasses.replace(qr, values=res.values.copy()),
+            )
+            resolved.add(p.request_id)
+            with self._cond:
+                self._queries_done += 1
+                self._bytes_read += res.bytes_read
+                self._shard_loads += res.shard_loads
+            p.future.set_result(qr)
+
+        seeds = [
+            LaneSeed(source=p.source, max_iters=p.max_iters, token=p)
+            for p in batch
+        ]
+        sweep = LaneSweep(
+            self.engine,
+            prog,
+            batch_shards=self.batch_shards,
+            pad_pow2=self.batcher.pad_pow2,
+        )
+        try:
+            sweep.run(seeds, backfill=backfill, on_retire=on_retire)
+        except BaseException as exc:  # propagate to every unresolved caller
+            for p in admitted:
+                if p.request_id not in resolved and not p.future.done():
+                    p.future.set_exception(exc)
+        finally:
+            with self._cond:
+                self._sweeps += 1
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate serving counters (loads/bytes are lane-attributed)."""
+        with self._cond:
+            done = self._queries_done
+            return {
+                "queries_completed": done,
+                "sweeps": self._sweeps,
+                "pending": len(self._pending),
+                "bytes_read_total": self._bytes_read,
+                "shard_loads_total": self._shard_loads,
+                "loads_per_query": self._shard_loads / done if done else 0.0,
+                "session_hits": self.sessions.hits,
+                "session_misses": self.sessions.misses,
+            }
+
+    def bump_graph_version(self) -> int:
+        """Invalidate all cached results (graph changed underneath)."""
+        with self._cond:
+            self.graph_version += 1
+            return self.graph_version
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self, *, close_engine: bool = True) -> None:
+        """Drain the queue, stop the worker, release the engine.
+
+        Idempotent — safe to call repeatedly and after ``__exit__``.
+        """
+        with self._cond:
+            already = self._closed
+            self._closed = True
+            self._cond.notify_all()
+        if not already and self._worker.is_alive():
+            self._worker.join()
+        if close_engine and not self._engine_closed:
+            self._engine_closed = True
+            self.engine.close()
+
+    def __enter__(self) -> "GraphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,261 @@
+"""Lane-batched VSW sweeps: K concurrent queries over one shard stream.
+
+A :class:`LaneSweep` reuses a warm :class:`~repro.core.vsw.VSWEngine`'s
+scheduler, pipeline and store, but replaces the single vertex-value array
+with a ``(capacity, n)`` lane matrix — one row per in-flight query — and
+dispatches each loaded shard through a lane executor
+(:func:`repro.core.executor.make_lane_executor`) so every shard load is
+amortized across all live lanes.
+
+Scheduling uses the UNION of the per-lane active sets: a shard is skipped
+only when *no* lane's Bloom filter matches.  This preserves per-lane
+results bitwise (DESIGN.md §6): the union plan is a superset of each lane's
+own plan (``any_member`` over a superset of ids can only add shards, and
+above-threshold lanes force the full plan), and recomputing a shard whose
+in-messages did not change reproduces the carried-over value exactly — for
+monotone ``min`` programs because ``min(acc, old) == old``, and for the
+``sum`` programs because ``apply`` is a deterministic function of an
+unchanged ``acc``.
+
+Lanes retire as soon as their own active set empties (or their iteration
+budget runs out) and the freed slot is immediately backfilled from the
+service queue, keeping the lane matrix full under load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.apps import LaneProgram
+from repro.core.executor import ExecStats, make_lane_executor
+from repro.core.pipeline import PipelineStats
+from repro.core.vsw import VSWEngine
+
+from .batcher import pad_lanes
+
+__all__ = ["LaneSeed", "LaneResult", "SweepIterStats", "LaneSweep"]
+
+
+@dataclasses.dataclass
+class LaneSeed:
+    """One admitted query: where it starts and how long it may run."""
+
+    source: int
+    max_iters: int = 100
+    token: Any = None  # opaque caller payload (the service's pending entry)
+
+
+@dataclasses.dataclass
+class LaneResult:
+    """One retired lane: final values plus attributed cost.
+
+    ``bytes_read`` / ``shard_loads`` are the lane's *share* of the sweep's
+    I/O: each iteration's cost is split evenly over the lanes live in it —
+    the amortization the serving layer exists to create.
+    """
+
+    token: Any
+    source: int
+    values: np.ndarray  # [n] final vertex values for this query
+    iterations: int
+    converged: bool
+    bytes_read: float
+    shard_loads: float
+
+
+@dataclasses.dataclass
+class SweepIterStats:
+    iteration: int
+    live_lanes: int
+    shards_processed: int
+    shards_skipped: int
+    bytes_read: int
+    selective_on: bool
+    retired: int
+    backfilled: int
+    time_s: float
+
+
+class LaneSweep:
+    """Run per-source queries as lanes of one vertex-centric sweep."""
+
+    def __init__(
+        self,
+        engine: VSWEngine,
+        program: LaneProgram,
+        *,
+        batch_shards: int = 1,
+        pad_pow2: bool = True,
+    ):
+        self.engine = engine
+        self.program = program
+        self.pad_pow2 = pad_pow2
+        self.executor = make_lane_executor(
+            engine.backend_name, batch_shards=batch_shards
+        )
+        self.iter_stats: List[SweepIterStats] = []
+
+    # ------------------------------------------------------------------ run
+    def run(
+        self,
+        seeds: Sequence[LaneSeed],
+        *,
+        backfill: Optional[Callable[[int], Sequence[LaneSeed]]] = None,
+        on_retire: Optional[Callable[[LaneResult], None]] = None,
+    ) -> List[LaneResult]:
+        """Sweep until every lane has retired and ``backfill`` is dry.
+
+        ``backfill(n_free)`` is called whenever slots free up; it may return
+        up to ``n_free`` new seeds which start their own iteration 0
+        mid-sweep.  ``on_retire`` fires the moment a lane finishes — the
+        service resolves that query's future immediately rather than at
+        sweep end.
+        """
+        if not seeds:
+            return []
+        engine, prog = self.engine, self.program
+        meta = engine.meta
+        n = meta.num_vertices
+
+        results: List[LaneResult] = []
+
+        def finish_zero_budget(seed: LaneSeed) -> None:
+            """``max_iters <= 0`` parity with ``VSWEngine.run``: zero
+            iterations, init values, not converged — never takes a lane."""
+            v, _ = prog.init_lane(meta, seed.source)
+            res = LaneResult(
+                token=seed.token, source=seed.source,
+                values=v.astype(np.float32), iterations=0, converged=False,
+                bytes_read=0.0, shard_loads=0.0,
+            )
+            results.append(res)
+            if on_retire is not None:
+                on_retire(res)
+
+        live_seeds = []
+        for seed in seeds:
+            if seed.max_iters > 0:
+                live_seeds.append(seed)
+            else:
+                finish_zero_budget(seed)
+        seeds = live_seeds
+        if not seeds:
+            return results
+        capacity = pad_lanes(len(seeds)) if self.pad_pow2 else len(seeds)
+
+        vals = np.zeros((capacity, n), dtype=np.float32)
+        active = np.zeros((capacity, n), dtype=bool)
+        live = np.zeros(capacity, dtype=bool)
+        sources = np.full(capacity, -1, dtype=np.int64)
+        lane_iters = np.zeros(capacity, dtype=np.int64)
+        lane_bytes = np.zeros(capacity, dtype=np.float64)
+        lane_loads = np.zeros(capacity, dtype=np.float64)
+        lane_seed: List[Optional[LaneSeed]] = [None] * capacity
+
+        def admit(slot: int, seed: LaneSeed) -> None:
+            v, a = prog.init_lane(meta, seed.source)
+            vals[slot] = v
+            active[slot] = a
+            live[slot] = True
+            sources[slot] = seed.source
+            lane_iters[slot] = 0
+            lane_bytes[slot] = 0.0
+            lane_loads[slot] = 0.0
+            lane_seed[slot] = seed
+
+        for slot, seed in enumerate(seeds):
+            admit(slot, seed)
+
+        pstats = PipelineStats()
+        xstats = ExecStats()
+        it = 0
+        while live.any():
+            t0 = time.perf_counter()
+            io0 = engine.store.io.snapshot()
+            pstats.reset()
+            xstats.reset()
+
+            union_ids = np.flatnonzero(active[live].any(axis=0)).astype(np.int64)
+            plan = engine.scheduler.plan(union_ids)
+            msgs = prog.pre(vals, meta.out_deg).astype(np.float32)
+            dst = vals.copy()  # carried over for skipped shards
+
+            loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
+            for res in self.executor.run(loaded, msgs, prog.combine, xstats):
+                new = prog.apply(
+                    np.asarray(res.acc, dtype=vals.dtype),
+                    vals[:, res.v0: res.v1],
+                    meta,
+                    res.v0,
+                    sources,
+                )
+                dst[:, res.v0: res.v1] = new
+            # Retired / free lanes stay frozen at their final values.
+            dst[~live] = vals[~live]
+
+            new_active = prog.is_active(dst, vals)
+            new_active[~live] = False
+            vals, active = dst, new_active
+            lane_iters[live] += 1
+
+            # ------------------------------------- per-lane cost attribution
+            dio = engine.store.io - io0
+            n_live = int(live.sum())
+            lane_bytes[live] += dio.bytes_read / n_live
+            lane_loads[live] += plan.num_planned / n_live
+
+            # --------------------------------------- retirement + backfill
+            retired = 0
+            for k in np.flatnonzero(live):
+                seed = lane_seed[k]
+                converged = not active[k].any()
+                if converged or lane_iters[k] >= seed.max_iters:
+                    live[k] = False
+                    active[k] = False
+                    retired += 1
+                    res_k = LaneResult(
+                        token=seed.token,
+                        source=seed.source,
+                        values=vals[k].copy(),
+                        iterations=int(lane_iters[k]),
+                        converged=converged,
+                        bytes_read=float(lane_bytes[k]),
+                        shard_loads=float(lane_loads[k]),
+                    )
+                    results.append(res_k)
+                    if on_retire is not None:
+                        on_retire(res_k)
+
+            backfilled = 0
+            if backfill is not None:
+                free = list(np.flatnonzero(~live))
+                while free:
+                    got = list(backfill(len(free)))
+                    if not got:
+                        break
+                    for seed in got:
+                        if seed.max_iters <= 0:
+                            finish_zero_budget(seed)  # slot stays free
+                        else:
+                            admit(int(free.pop(0)), seed)
+                            backfilled += 1
+
+            self.iter_stats.append(
+                SweepIterStats(
+                    iteration=it,
+                    live_lanes=n_live,
+                    shards_processed=plan.num_planned,
+                    shards_skipped=plan.num_skipped,
+                    bytes_read=dio.bytes_read,
+                    selective_on=plan.selective_on,
+                    retired=retired,
+                    backfilled=backfilled,
+                    time_s=time.perf_counter() - t0,
+                )
+            )
+            it += 1
+        return results
