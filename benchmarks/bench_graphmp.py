@@ -16,6 +16,11 @@ Mapping to the paper:
                      and bytes-read-per-query at lane budgets K ∈ {1, 4, 16}
                      on the cache-miss-heavy config, plus the bitwise oracle
                      check on a lane-batched result.
+  fig_ingest       — streamed out-of-core ingestion (repro/core/ingest) vs
+                     the in-memory preprocess: peak traced bytes and bytes
+                     written as |E| scales past the chunk/spill budget; the
+                     streamed peak must stay flat while the in-memory peak
+                     grows O(|E|).
 
 Standalone usage (CI smoke mode)::
 
@@ -309,6 +314,106 @@ def fig_serve(rows: List[str], *, quick: bool = False) -> None:
     assert amort >= 4.0, f"K=16 amortization {amort:.2f}x below 4x floor"
 
 
+def fig_ingest(rows: List[str], *, quick: bool = False) -> None:
+    """Streamed external build vs in-memory preprocess (ISSUE 3 tentpole).
+
+    Both paths end in the same on-disk store (bitwise-identical shards,
+    asserted); what differs is peak memory.  The in-memory path
+    materializes + lexsorts the whole edge list, so its peak grows
+    O(|E|); the streamed path's peak is O(chunk + budget + one shard) —
+    with a fixed edges-per-shard target it must stay flat as |E| scales.
+    Peaks are tracemalloc-traced allocation high-water marks (numpy
+    allocations route through tracemalloc's hooks).
+    """
+    import gc
+    import os
+    import tracemalloc
+
+    from repro.core.ingest import write_edge_file
+    from repro.core.sharding import preprocess
+    from repro.core.storage import ShardStore
+
+    num_v = 20_000
+    if quick:
+        sizes = [100_000, 200_000, 400_000]
+        edges_per_shard, chunk_edges, budget = 25_000, 10_000, 256 << 10
+    else:
+        sizes = [400_000, 800_000, 1_600_000]
+        edges_per_shard, chunk_edges, budget = 50_000, 20_000, 1 << 20
+    window, k, tr = 256, 16, 8
+
+    peaks_stream: Dict[int, int] = {}
+    for num_e in sizes:
+        g = rmat_graph(num_v, num_e, seed=8)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "edges.bin")
+            file_bytes = write_edge_file(path, g.src, g.dst)
+
+            # in-memory oracle path: preprocess + write the same store
+            store_m = ShardStore(os.path.join(d, "mem"))
+            gc.collect()
+            tracemalloc.start()
+            tracemalloc.reset_peak()
+            t0 = time.perf_counter()
+            meta_m, shards_m = preprocess(g, edges_per_shard=edges_per_shard)
+            store_m.write_meta(meta_m)
+            for s in shards_m:
+                store_m.write_shard(s, num_vertices=num_v, window=window,
+                                    k=k, tr=tr)
+            wall_mem = time.perf_counter() - t0
+            peak_mem = tracemalloc.get_traced_memory()[1]
+            tracemalloc.stop()
+            ref = {s.shard_id: s for s in shards_m}
+            del g, shards_m
+            gc.collect()
+
+            # streamed external build from the edge file
+            store_s = ShardStore(os.path.join(d, "stream"))
+            tracemalloc.start()
+            tracemalloc.reset_peak()
+            t0 = time.perf_counter()
+            meta_s, stats = store_s.ingest(
+                path, edges_per_shard=edges_per_shard, num_vertices=num_v,
+                chunk_edges=chunk_edges, mem_budget_bytes=budget,
+                window=window, k=k, tr=tr,
+            )
+            wall_stream = time.perf_counter() - t0
+            peak_stream = tracemalloc.get_traced_memory()[1]
+            tracemalloc.stop()
+            peaks_stream[num_e] = peak_stream
+
+            # shard-by-shard bitwise oracle on a sample of shards
+            step = max(1, meta_s.num_shards // 4)
+            for p in range(0, meta_s.num_shards, step):
+                got = store_s.load_shard(p, "csr")
+                assert np.array_equal(got.row, ref[p].row)
+                assert np.array_equal(got.col, ref[p].col)
+
+            rows.append(
+                f"fig_ingest_E{num_e},{wall_stream*1e6:.0f},"
+                f"peak_stream_bytes={peak_stream}"
+                f";peak_inmem_bytes={peak_mem}"
+                f";peak_ratio={peak_mem/max(peak_stream,1):.2f}x"
+                f";wall_inmem_us={wall_mem*1e6:.0f}"
+                f";file_bytes={file_bytes}"
+                f";spill_bytes={stats.spill_bytes_written}"
+                f";bytes_written={stats.bytes_written_total}"
+                f";runs={stats.runs};shards={meta_s.num_shards}"
+                f";bitwise_sampled=True"
+            )
+
+    growth = peaks_stream[sizes[-1]] / max(peaks_stream[sizes[0]], 1)
+    rows.append(
+        f"fig_ingest_peak_growth,{growth:.2f},"
+        f"stream_peak_E{sizes[-1]}_over_E{sizes[0]}={growth:.2f}x"
+        f"_for_{sizes[-1]//sizes[0]}x_edges"
+    )
+    assert growth < 1.6, (
+        f"streamed ingestion peak grew {growth:.2f}x over a "
+        f"{sizes[-1]//sizes[0]}x |E| range — no longer out-of-core"
+    )
+
+
 SECTIONS = {
     "fig5_selective": lambda rows, quick: fig5_selective(rows),
     "fig8_10_engines": lambda rows, quick: fig8_10_engines(rows),
@@ -316,6 +421,7 @@ SECTIONS = {
     "table2_io": lambda rows, quick: table2_io(rows),
     "fig3_pipeline": lambda rows, quick: fig3_pipeline(rows, quick=quick),
     "fig_serve": lambda rows, quick: fig_serve(rows, quick=quick),
+    "fig_ingest": lambda rows, quick: fig_ingest(rows, quick=quick),
 }
 
 
@@ -332,6 +438,7 @@ def run(rows: List[str], *, quick: bool = False,
     if quick:
         fig3_pipeline(rows, quick=True)
         fig_serve(rows, quick=True)
+        fig_ingest(rows, quick=True)
         return
     for name in SECTIONS:
         SECTIONS[name](rows, quick)

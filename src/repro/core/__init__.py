@@ -20,6 +20,7 @@ from .graph import (
     uniform_graph,
 )
 from .executor import BatchedEllExecutor, PerShardExecutor, make_executor
+from .ingest import IngestStats, ingest_edge_file, iter_edge_chunks, write_edge_file
 from .pipeline import LoadedShard, PipelineStats, ShardPipeline
 from .scheduler import ShardPlan, ShardScheduler
 from .vsw import BACKENDS, IterStats, RunResult, VSWEngine
@@ -45,4 +46,8 @@ __all__ = [
     "PerShardExecutor",
     "BatchedEllExecutor",
     "make_executor",
+    "IngestStats",
+    "ingest_edge_file",
+    "iter_edge_chunks",
+    "write_edge_file",
 ]

@@ -146,6 +146,17 @@ class ShardCache:
             self.stats.inserted_bytes_stored += len(blob)
             return True
 
+    def invalidate(self, shard_id: int) -> bool:
+        """Drop one entry (the shard was overwritten on disk); returns
+        whether anything was cached.  Not counted as an eviction — the
+        entry did not lose a capacity race, it became wrong."""
+        with self._lock:
+            blob = self._data.pop(shard_id, None)
+            if blob is None:
+                return False
+            self._bytes -= len(blob)
+            return True
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

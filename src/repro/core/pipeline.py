@@ -124,6 +124,11 @@ class ShardPipeline:
             csr, ell = self.resident[p]
             return LoadedShard(p, csr, ell, load_s=time.perf_counter() - t0,
                                from_resident=True)
+        # Snapshot the shard generation BEFORE the read: if an overwrite
+        # (re-ingest) lands between our disk read and our cache insert,
+        # the generation moves and we discard what we inserted — the
+        # invalidation hook alone cannot catch bytes cached after it ran.
+        gen0 = self.store.shard_generation(p)
         from_cache = False
         raw = self.cache.get(p) if self.cache is not None else None
         if raw is not None:
@@ -132,12 +137,16 @@ class ShardPipeline:
             raw = self.store.shard_bytes(p, self.fmt)
             if self.cache is not None:
                 self.cache.put(p, raw)
+                if self.store.shard_generation(p) != gen0:
+                    self.cache.invalidate(p)  # raced with an overwrite
         if self.fmt == "csr":
             csr, ell = self.store.decode_csr(p, raw), None
         else:
             csr, ell = None, self.store.decode_ell(p, raw)
         if self.resident is not None:
             self.resident[p] = (csr, ell)
+            if self.store.shard_generation(p) != gen0:
+                self.resident.pop(p, None)  # same race, decoded form
         return LoadedShard(p, csr, ell, load_s=time.perf_counter() - t0,
                            from_cache=from_cache)
 

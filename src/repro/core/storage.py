@@ -20,7 +20,7 @@ import io
 import json
 import os
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -96,6 +96,16 @@ class ShardStore:
         # behind compute, it does not multiply channel bandwidth).
         self._throttle_lock = threading.Lock()
         self._channel_free_at = 0.0
+        # Overwriting a shard that a live engine has cached (byte cache,
+        # device-resident decode) must not leave stale decodes behind:
+        # consumers register a hook and write_shard/ingest notify it with
+        # the shard id whenever an EXISTING shard file is replaced/removed.
+        # The generation counter closes the read->invalidate->put race: a
+        # loader snapshots shard_generation() before reading and discards
+        # its bytes if the generation moved by insertion time.
+        self._invalidation_hooks: List[Callable[[int], None]] = []
+        self._shard_gen: Dict[int, int] = {}
+        self._gen_lock = threading.Lock()
 
     # ------------------------------------------------------------------ raw
     def _path(self, name: str) -> str:
@@ -134,6 +144,32 @@ class ShardStore:
 
     def exists(self, name: str) -> bool:
         return os.path.exists(self._path(name))
+
+    # ------------------------------------------------------- invalidation
+    def register_invalidation(self, hook: Callable[[int], None]) -> None:
+        """Call ``hook(shard_id)`` whenever an existing shard is replaced
+        (re-ingest / overwrite) or removed, so cached raw bytes and
+        decoded/device-resident copies can be dropped."""
+        self._invalidation_hooks.append(hook)
+
+    def unregister_invalidation(self, hook: Callable[[int], None]) -> None:
+        try:
+            self._invalidation_hooks.remove(hook)
+        except ValueError:
+            pass
+
+    def shard_generation(self, p: int) -> int:
+        """Monotone per-shard counter, bumped on every overwrite/removal.
+        Loaders snapshot it before a read and compare after inserting into
+        a cache: a moved generation means the bytes may be stale."""
+        with self._gen_lock:
+            return self._shard_gen.get(p, 0)
+
+    def invalidate_shard(self, p: int) -> None:
+        with self._gen_lock:
+            self._shard_gen[p] = self._shard_gen.get(p, 0) + 1
+        for hook in list(self._invalidation_hooks):
+            hook(p)
 
     def file_size(self, name: str) -> int:
         return os.path.getsize(self._path(name))
@@ -185,7 +221,18 @@ class ShardStore:
         k: int,
         tr: int,
     ) -> EllShard:
-        """Persist CSR + derived device (ELL) format; returns the EllShard."""
+        """Persist CSR + derived device (ELL) format; returns the EllShard.
+
+        Overwriting an existing shard id bumps the shard's generation and
+        notifies every registered invalidation hook AFTER the new bytes
+        land.  A loader concurrently holding pre-replacement bytes cannot
+        re-cache them either: it snapshots ``shard_generation`` before its
+        read and discards the insert when the generation has moved
+        (``ShardPipeline._load``).
+        """
+        overwrite = self.exists(self.shard_name(shard.shard_id, "csr")) or self.exists(
+            self.shard_name(shard.shard_id, "ell")
+        )
         ell = csr_to_ell(shard, num_vertices, window=window, k=k, tr=tr)
         csr_raw = _save_npz_bytes(
             interval=np.array([shard.v0, shard.v1], dtype=np.int64),
@@ -204,6 +251,8 @@ class ShardStore:
         )
         self.write_bytes(self.shard_name(shard.shard_id, "csr"), csr_raw)
         self.write_bytes(self.shard_name(shard.shard_id, "ell"), ell_raw)
+        if overwrite:
+            self.invalidate_shard(shard.shard_id)
         return ell
 
     def shard_bytes(self, p: int, fmt: str = "csr") -> bytes:
@@ -275,6 +324,49 @@ class ShardStore:
         raws = self.shard_bytes_bulk(ps, fmt, max_workers=max_workers)
         decode = self.decode_csr if fmt == "csr" else self.decode_ell
         return {p: decode(p, raw) for p, raw in raws.items()}
+
+    # ------------------------------------------------------------ ingestion
+    def ingest(
+        self,
+        path: str,
+        *,
+        edges_per_shard: Optional[int] = None,
+        num_shards: Optional[int] = None,
+        num_vertices: Optional[int] = None,
+        chunk_edges: int = 1 << 20,
+        mem_budget_bytes: int = 64 << 20,
+        window: int = 1 << 14,
+        k: int = 128,
+        tr: int = 8,
+        fmt: Optional[str] = None,
+    ) -> Tuple["GraphMeta", "object"]:
+        """Stream an on-disk edge file into this store — the out-of-core
+        counterpart of ``preprocess`` + ``write_meta``/``write_shard``.
+
+        Two-pass external build (``repro.core.ingest``): pass 1 streams
+        ``chunk_edges``-sized chunks to accumulate degrees and compute
+        intervals; pass 2 scatters edges into per-shard sorted spill runs
+        (flushed whenever ``mem_budget_bytes`` of keys are buffered) and
+        k-way merges each shard's runs into the final destination-sorted
+        CSR + ELL containers.  Peak memory is O(chunk + one shard); the
+        result is bitwise-identical to the in-memory path.  Returns
+        ``(GraphMeta, IngestStats)``.
+        """
+        from .ingest import ingest_edge_file  # local: avoids import cycle
+
+        return ingest_edge_file(
+            self,
+            path,
+            edges_per_shard=edges_per_shard,
+            num_shards=num_shards,
+            num_vertices=num_vertices,
+            chunk_edges=chunk_edges,
+            mem_budget_bytes=mem_budget_bytes,
+            window=window,
+            k=k,
+            tr=tr,
+            fmt=fmt,
+        )
 
     # ------------------------------------------------------ auxiliary blobs
     def write_aux(self, name: str, **arrays) -> None:

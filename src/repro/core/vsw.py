@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import List, Optional
 
 import numpy as np
@@ -152,6 +153,25 @@ class VSWEngine:
         # host->device transfer on every revisit).
         self.device_resident = device_resident and backend in ("jnp", "pallas")
         self._device_shards = {}
+        # Re-ingest / shard overwrite on the live store must not leave
+        # stale decodes behind in this engine's byte cache or resident map.
+        # The hook holds only a weakref: a long-lived store handed from
+        # engine to engine (the re-ingest workflow) must not pin dead
+        # engines — and their caches — alive.
+        self_ref = weakref.ref(self)
+
+        def _hook(p: int, _ref=self_ref) -> None:
+            eng = _ref()
+            if eng is not None:
+                eng._on_shard_invalidated(p)
+
+        self._invalidation_hook = _hook
+        # unregister when the engine is GC'd without close(), so the
+        # store's hook list cannot grow without bound either
+        self._hook_finalizer = weakref.finalize(
+            self, store.unregister_invalidation, _hook
+        )
+        store.register_invalidation(_hook)
 
         # ---- the three layers ------------------------------------------
         self.scheduler = ShardScheduler(
@@ -172,6 +192,12 @@ class VSWEngine:
             resident=self._device_shards if self.device_resident else None,
         )
         self.executor = make_executor(backend, batch_shards=batch_shards)
+
+    def _on_shard_invalidated(self, p: int) -> None:
+        """Store callback: shard ``p`` was overwritten/removed on disk."""
+        if self.cache is not None:
+            self.cache.invalidate(p)
+        self._device_shards.pop(p, None)
 
     # ------------------------------------------------------------- factory
     @classmethod
@@ -198,6 +224,55 @@ class VSWEngine:
             store.write_shard(
                 s, num_vertices=meta.num_vertices, window=window, k=k, tr=tr
             )
+        return cls(store, **engine_kwargs)
+
+    @classmethod
+    def from_store(
+        cls,
+        root: str,
+        *,
+        emulate_bw: Optional[float] = None,
+        **engine_kwargs,
+    ) -> "VSWEngine":
+        """Open an engine on an already-populated store directory (e.g. one
+        built by :meth:`ShardStore.ingest`) — no ``Graph`` object, no edge
+        list in memory, ever."""
+        return cls(ShardStore(root, emulate_bw=emulate_bw), **engine_kwargs)
+
+    @classmethod
+    def from_edge_file(
+        cls,
+        path: str,
+        root: str,
+        *,
+        edges_per_shard: Optional[int] = None,
+        num_shards: Optional[int] = None,
+        num_vertices: Optional[int] = None,
+        chunk_edges: int = 1 << 20,
+        mem_budget_bytes: int = 64 << 20,
+        window: int = 1 << 14,
+        k: int = 128,
+        tr: int = 8,
+        fmt: Optional[str] = None,
+        emulate_bw: Optional[float] = None,
+        **engine_kwargs,
+    ) -> "VSWEngine":
+        """Stream-ingest an on-disk edge file into ``root`` (bounded-memory
+        external build, ``repro.core.ingest``) and open an engine on it.
+        The full edge list is never resident."""
+        store = ShardStore(root, emulate_bw=emulate_bw)
+        store.ingest(
+            path,
+            edges_per_shard=edges_per_shard,
+            num_shards=num_shards,
+            num_vertices=num_vertices,
+            chunk_edges=chunk_edges,
+            mem_budget_bytes=mem_budget_bytes,
+            window=window,
+            k=k,
+            tr=tr,
+            fmt=fmt,
+        )
         return cls(store, **engine_kwargs)
 
     @property
@@ -238,6 +313,7 @@ class VSWEngine:
         """Shut down the prefetch thread pool.  Idempotent: safe to call
         any number of times, including after a context-manager exit."""
         self.pipeline.close()
+        self._hook_finalizer()  # unregisters the invalidation hook once
 
     def __enter__(self) -> "VSWEngine":
         return self

@@ -115,29 +115,50 @@ class GraphService:
         self._worker.start()
 
     # ------------------------------------------------------------- factory
+    #
+    # All factories split kwargs the same way: service-level options are
+    # consumed here, everything else flows to the engine constructor.
+    # Only names are listed — ``__init__`` stays the single source of the
+    # default values.
+    _SERVICE_KWARGS = (
+        "max_lanes",
+        "pad_pow2",
+        "batch_shards",
+        "session_entries",
+        "max_pending",
+        "graph_version",
+    )
+
     @classmethod
-    def from_graph(
-        cls,
-        graph: Graph,
-        root: str,
-        *,
-        max_lanes: int = 16,
-        pad_pow2: bool = True,
-        batch_shards: int = 1,
-        session_entries: int = 256,
-        max_pending: Optional[int] = None,
-        **engine_kwargs,
-    ) -> "GraphService":
-        """Preprocess ``graph`` into ``root``, warm an engine, start serving."""
-        engine = VSWEngine.from_graph(graph, root, **engine_kwargs)
-        return cls(
-            engine,
-            max_lanes=max_lanes,
-            pad_pow2=pad_pow2,
-            batch_shards=batch_shards,
-            session_entries=session_entries,
-            max_pending=max_pending,
-        )
+    def _split(cls, kwargs: Dict[str, Any]) -> Dict[str, Any]:
+        """Pop the service-level options the caller actually passed."""
+        return {k: kwargs.pop(k) for k in cls._SERVICE_KWARGS if k in kwargs}
+
+    @classmethod
+    def from_graph(cls, graph: Graph, root: str, **kwargs) -> "GraphService":
+        """Preprocess ``graph`` into ``root``, warm an engine, start serving.
+
+        Service options (``max_lanes``, ``pad_pow2``, ``batch_shards``,
+        ``session_entries``, ``max_pending``) are consumed here; remaining
+        kwargs go to :meth:`VSWEngine.from_graph`.
+        """
+        service_kw = cls._split(kwargs)
+        return cls(VSWEngine.from_graph(graph, root, **kwargs), **service_kw)
+
+    @classmethod
+    def from_store(cls, root: str, **kwargs) -> "GraphService":
+        """Serve from an already-populated store directory (e.g. built by
+        ``ShardStore.ingest``) without ever holding a ``Graph`` object."""
+        service_kw = cls._split(kwargs)
+        return cls(VSWEngine.from_store(root, **kwargs), **service_kw)
+
+    @classmethod
+    def from_edge_file(cls, path: str, root: str, **kwargs) -> "GraphService":
+        """Stream-ingest an edge file into ``root`` (bounded-memory external
+        build) and start serving from it — the serving-scale boot path for
+        graphs whose edge list exceeds RAM."""
+        service_kw = cls._split(kwargs)
+        return cls(VSWEngine.from_edge_file(path, root, **kwargs), **service_kw)
 
     # -------------------------------------------------------------- submit
     def submit(

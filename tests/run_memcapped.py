@@ -1,0 +1,46 @@
+"""Run the ingestion tests under a hard address-space cap (CI satellite).
+
+The streamed ingestion pipeline promises O(chunk + one shard) peak memory.
+``test_ingest.py`` asserts that with tracemalloc (precise, catches any
+O(|E|) regression); this runner adds defense in depth: the whole pytest
+process runs under ``RLIMIT_AS``, so a regression that dodges tracemalloc
+(native allocations, mmap-backed arrays) still dies loudly with
+``MemoryError`` instead of quietly passing on a big-RAM CI host.
+
+Engine-booting tests (``e2e`` in the name) import jax and are excluded —
+XLA's address-space reservations are unrelated to what this cap guards.
+
+Usage (CI)::
+
+    PYTHONPATH=src python tests/run_memcapped.py
+
+``MEMCAP_BYTES`` overrides the default 2 GiB cap.
+"""
+
+import os
+import sys
+
+DEFAULT_CAP = 2 << 30  # 2 GiB: interpreter + numpy + headroom, << big-RAM CI
+
+
+def main() -> int:
+    cap = int(os.environ.get("MEMCAP_BYTES", DEFAULT_CAP))
+    try:
+        import resource
+
+        resource.setrlimit(resource.RLIMIT_AS, (cap, cap))
+        print(f"run_memcapped: RLIMIT_AS = {cap} bytes", flush=True)
+    except (ImportError, ValueError, OSError) as exc:  # non-POSIX fallback
+        print(f"run_memcapped: could not set RLIMIT_AS ({exc}); "
+              "running uncapped", flush=True)
+
+    import pytest
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    return pytest.main(
+        ["-x", "-q", os.path.join(here, "test_ingest.py"), "-k", "not e2e"]
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())
