@@ -21,6 +21,11 @@ Mapping to the paper:
                      written as |E| scales past the chunk/spill budget; the
                      streamed peak must stay flat while the in-memory peak
                      grows O(|E|).
+  fig_delta        — live edge mutations (repro/delta): per-sweep wall time
+                     and bytes read as the pending-delta fraction grows,
+                     before and after background-style recompaction, with
+                     the bitwise oracle (fresh preprocess of the mutated
+                     edge list) asserted at every point.
 
 Standalone usage (CI smoke mode)::
 
@@ -414,6 +419,114 @@ def fig_ingest(rows: List[str], *, quick: bool = False) -> None:
     )
 
 
+def fig_delta(rows: List[str], *, quick: bool = False) -> None:
+    """Sweep cost vs pending-delta fraction (ISSUE 4 tentpole).
+
+    A store absorbing updates pays an overlay merge on every decode of a
+    dirty shard (and ELL consumers decode via CSR + a host ``csr_to_ell``);
+    recompaction folds the runs into new base shards and restores the
+    clean-store cost.  This section publishes insert+delete batches sized
+    to a fraction of |E|, measures a fixed-iteration PageRank sweep at each
+    state, and asserts the bitwise oracle (a fresh in-memory preprocess of
+    the mutated edge list on the same intervals) before AND after
+    recompaction.
+    """
+    import os
+
+    from repro.core.graph import Graph
+    from repro.core.ingest import write_edge_file
+    from repro.core.sharding import build_shards
+    from repro.core.storage import ShardStore
+    from repro.delta import EdgeLog, Recompactor
+
+    rng = np.random.default_rng(21)
+    if quick:
+        num_v, num_e, shards, fracs, iters = 10_000, 100_000, 8, [0.05, 0.2], 3
+    else:
+        num_v, num_e, shards, fracs, iters = 20_000, 400_000, 8, [0.05, 0.2, 0.5], 3
+    window, k, tr = 256, 16, 8
+    g = rmat_graph(num_v, num_e, seed=21)
+
+    def sweep_cost(store):
+        eng = VSWEngine(store, backend="numpy", selective=False)
+        io0 = store.io.snapshot()
+        t0 = time.perf_counter()
+        res = eng.run(apps.pagerank(), max_iters=iters)
+        wall = time.perf_counter() - t0
+        dio = store.io - io0
+        eng.close()
+        return res.values, wall, dio.bytes_read
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "edges.bin")
+        write_edge_file(path, g.src, g.dst)
+        store = ShardStore(os.path.join(d, "live"))
+        meta, _ = store.ingest(path, num_shards=shards, num_vertices=num_v,
+                               window=window, k=k, tr=tr)
+        base_vals, base_wall, base_bytes = sweep_cost(store)
+        rows.append(
+            f"fig_delta_clean,{base_wall*1e6:.0f},"
+            f"bytes_read={base_bytes};pending_frac=0.00"
+        )
+
+        src, dst = g.src, g.dst
+        log = EdgeLog(store)
+        applied = 0.0
+        for frac in fracs:
+            n_mut = int(num_e * (frac - applied))
+            applied = frac
+            ins = (rng.integers(0, num_v, n_mut // 2),
+                   rng.integers(0, num_v, n_mut // 2))
+            take = rng.choice(len(src), n_mut // 2, replace=False)
+            dels = (src[take], dst[take])
+            log.append(inserts=ins, deletes=dels)
+            pub = log.publish()
+            # oracle edge state
+            tomb = np.unique((dels[1].astype(np.int64) << 32)
+                             | dels[0].astype(np.int64))
+            keys = (dst.astype(np.int64) << 32) | src.astype(np.int64)
+            pos = np.minimum(np.searchsorted(tomb, keys), len(tomb) - 1)
+            keep = tomb[pos] != keys
+            src = np.concatenate([src[keep], ins[0].astype(np.int32)])
+            dst = np.concatenate([dst[keep], ins[1].astype(np.int32)])
+
+            vals, wall, bytes_read = sweep_cost(store)
+            pend_bytes = sum(store.delta.pending_stats(p)[3]
+                             for p in store.delta.dirty_shards())
+            rows.append(
+                f"fig_delta_overlay_f{frac:.2f},{wall*1e6:.0f},"
+                f"bytes_read={bytes_read}"
+                f";overhead_vs_clean={wall/max(base_wall,1e-9):.2f}x"
+                f";pending_run_bytes={pend_bytes}"
+                f";dirty_shards={len(store.delta.dirty_shards())}"
+                f";version={pub.version}"
+            )
+
+        # bitwise oracle on the overlay, then recompact and re-check
+        mg = Graph(num_v, src, dst)
+        ref = {s.shard_id: s for s in build_shards(mg, meta.intervals)}
+        for p in range(0, meta.num_shards, max(1, meta.num_shards // 4)):
+            got = store.load_shard(p, "csr")
+            assert np.array_equal(got.col, ref[p].col)
+        t0 = time.perf_counter()
+        cst = Recompactor(store).compact()
+        compact_wall = time.perf_counter() - t0
+        vals_c, wall_c, bytes_c = sweep_cost(store)
+        assert np.array_equal(vals, vals_c), "recompaction changed results"
+        for p in range(0, meta.num_shards, max(1, meta.num_shards // 4)):
+            got = store.load_shard(p, "csr")
+            assert np.array_equal(got.col, ref[p].col)
+        rows.append(
+            f"fig_delta_compacted,{wall_c*1e6:.0f},"
+            f"bytes_read={bytes_c}"
+            f";overhead_vs_clean={wall_c/max(base_wall,1e-9):.2f}x"
+            f";compact_wall_us={compact_wall*1e6:.0f}"
+            f";runs_absorbed={cst.runs_absorbed}"
+            f";shards_compacted={cst.shards_compacted}"
+            f";bitwise_sampled=True"
+        )
+
+
 SECTIONS = {
     "fig5_selective": lambda rows, quick: fig5_selective(rows),
     "fig8_10_engines": lambda rows, quick: fig8_10_engines(rows),
@@ -422,6 +535,7 @@ SECTIONS = {
     "fig3_pipeline": lambda rows, quick: fig3_pipeline(rows, quick=quick),
     "fig_serve": lambda rows, quick: fig_serve(rows, quick=quick),
     "fig_ingest": lambda rows, quick: fig_ingest(rows, quick=quick),
+    "fig_delta": lambda rows, quick: fig_delta(rows, quick=quick),
 }
 
 
@@ -439,6 +553,7 @@ def run(rows: List[str], *, quick: bool = False,
         fig3_pipeline(rows, quick=True)
         fig_serve(rows, quick=True)
         fig_ingest(rows, quick=True)
+        fig_delta(rows, quick=True)
         return
     for name in SECTIONS:
         SECTIONS[name](rows, quick)

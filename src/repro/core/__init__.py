@@ -20,7 +20,17 @@ from .graph import (
     uniform_graph,
 )
 from .executor import BatchedEllExecutor, PerShardExecutor, make_executor
-from .ingest import IngestStats, ingest_edge_file, iter_edge_chunks, write_edge_file
+from .ingest import (
+    IngestStats,
+    csr_from_keys,
+    ingest_edge_file,
+    iter_edge_chunks,
+    keys_of_csr,
+    kway_merge,
+    pack_keys,
+    route_edges,
+    write_edge_file,
+)
 from .pipeline import LoadedShard, PipelineStats, ShardPipeline
 from .scheduler import ShardPlan, ShardScheduler
 from .vsw import BACKENDS, IterStats, RunResult, VSWEngine
@@ -50,4 +60,9 @@ __all__ = [
     "ingest_edge_file",
     "iter_edge_chunks",
     "write_edge_file",
+    "pack_keys",
+    "keys_of_csr",
+    "csr_from_keys",
+    "route_edges",
+    "kway_merge",
 ]

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import IO, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,6 +66,10 @@ __all__ = [
     "iter_edge_chunks",
     "ingest_edge_file",
     "kway_merge",
+    "pack_keys",
+    "keys_of_csr",
+    "csr_from_keys",
+    "route_edges",
 ]
 
 _TEXT_EXTS = (".txt", ".el", ".tsv", ".edges", ".edgelist")
@@ -258,6 +263,10 @@ class IngestStats:
     peak_shard_bytes: int = 0  # largest single-shard merge working set
     stale_shards_removed: int = 0  # re-ingest into a dir with more shards
     orphan_runs_removed: int = 0  # scratch left by a crashed prior ingest
+    stale_delta_runs_removed: int = 0  # re-ingest replaces pending deltas
+    finalize_workers: int = 1  # concurrent per-shard merge+write workers
+    warm_sources_built: int = 0  # shards whose Bloom inputs were deposited
+    warm_raw_bytes: int = 0  # container bytes left warm for cache prefill
 
     @property
     def bytes_written_total(self) -> int:
@@ -320,10 +329,56 @@ class _DegreeScan:
         return self.in_deg[:n].copy(), self.out_deg[:n].copy()
 
 
-def _pack_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+def pack_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
     """(dst << 32) | src — int64 keys whose ascending order is the
     destination-major (dst, src) lexicographic order for int32 ids."""
     return (dst.astype(np.int64) << 32) | src.astype(np.int64)
+
+
+_pack_keys = pack_keys  # original (private) name, kept for callers
+
+
+def keys_of_csr(csr) -> np.ndarray:
+    """Packed sorted keys of a destination-sorted CSR shard — the exact
+    inverse of :func:`csr_from_keys` (shards store edges in ascending key
+    order, so expanding rows back to (dst, src) pairs yields sorted keys).
+    """
+    rows = csr.v1 - csr.v0
+    dst_local = np.repeat(np.arange(rows, dtype=np.int64), np.diff(csr.row))
+    return ((dst_local + csr.v0) << 32) | csr.col.astype(np.int64)
+
+
+def csr_from_keys(shard_id: int, v0: int, v1: int, keys: np.ndarray):
+    """Build the ShardCSR of interval ``[v0, v1)`` from sorted packed keys.
+
+    Single point of truth for the key→CSR transform: the streamed ingest
+    finalize, the delta overlay decode and the recompactor all call it, so
+    a logical shard decodes bitwise-identically on every path.
+    """
+    dst_local = (keys >> 32) - v0
+    col = (keys & 0xFFFFFFFF).astype(np.int32)
+    counts = np.bincount(dst_local, minlength=v1 - v0)
+    row = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return ShardCSR(shard_id=shard_id, v0=v0, v1=v1, row=row, col=col)
+
+
+def route_edges(
+    intervals: np.ndarray, src: np.ndarray, dst: np.ndarray
+) -> Iterator[Tuple[int, np.ndarray]]:
+    """Scatter one edge chunk to destination shards: yields ``(p, keys)``
+    per touched shard (keys packed, file order preserved — NOT sorted).
+    The pass-2 spill path and the delta EdgeLog share this routing."""
+    if len(src) == 0:
+        return
+    keys = pack_keys(src, dst)
+    shard_of = np.searchsorted(intervals, dst, side="right") - 1
+    order = np.argsort(shard_of, kind="stable")
+    keys = keys[order]
+    shard_sorted = shard_of[order]
+    touched, starts = np.unique(shard_sorted, return_index=True)
+    stops = np.append(starts[1:], len(keys))
+    for p, lo, hi in zip(touched, starts, stops):
+        yield int(p), keys[lo:hi]
 
 
 def _run_name(shard_id: int, run: int) -> str:
@@ -343,6 +398,9 @@ def ingest_edge_file(
     k: int = 128,
     tr: int = 8,
     fmt: Optional[str] = None,
+    finalize_workers: int = 1,
+    warm_sources: bool = True,
+    warm_bytes: int = 0,
 ) -> Tuple[GraphMeta, IngestStats]:
     """Stream ``path`` into ``store`` with O(chunk + one shard) peak memory.
 
@@ -350,6 +408,20 @@ def ingest_edge_file(
     final shards all go through its accounted I/O channel.  Returns the
     same ``GraphMeta`` (bitwise) that in-memory ``preprocess`` would have
     produced, plus the build's :class:`IngestStats`.
+
+    ``finalize_workers``: per-shard k-way merges are independent, so the
+    finalize step can run them on a thread pool (0 = one worker per core,
+    capped at 4).  Peak memory grows to O(chunk + workers * shard); the
+    default of 1 preserves the strict single-shard bound.  Output and byte
+    accounting are identical for every worker count — each shard's merge is
+    self-contained and its bytes are measured per shard, not per interval
+    of the global counters.
+
+    Warmup (PR 3 follow-on): ``warm_sources`` deposits each shard's unique
+    source ids on the store while the merged arrays are in memory, so
+    engine boot builds Bloom filters without re-reading every shard;
+    ``warm_bytes > 0`` additionally keeps up to that many container bytes
+    for cache prefill at boot.
     """
     if chunk_edges < 1:
         raise ValueError("chunk_edges must be >= 1")
@@ -358,14 +430,25 @@ def ingest_edge_file(
     if (num_shards is None) == (edges_per_shard is None):
         # fail in milliseconds, not after a full pass over a huge file
         raise ValueError("specify exactly one of num_shards / edges_per_shard")
+    if finalize_workers < 0:
+        raise ValueError("finalize_workers must be >= 0 (0 = auto)")
+    if finalize_workers == 0:
+        finalize_workers = min(4, os.cpu_count() or 1)
     fmt = fmt or detect_format(path)
-    stats = IngestStats()
+    stats = IngestStats(finalize_workers=finalize_workers)
 
-    # orphaned scratch from a previously crashed/interrupted ingest
+    # orphaned scratch from a previously crashed/interrupted ingest, and
+    # pending delta runs from the store's previous life — a full re-ingest
+    # replaces the whole logical graph, so leftover mutations are stale
     for f in os.listdir(store.root):
         if f.startswith("ingest_run_") and f.endswith(".bin"):
             os.remove(store._path(f))
             stats.orphan_runs_removed += 1
+        elif f.startswith("delta_run_") or f == "delta_manifest.json":
+            os.remove(store._path(f))
+            stats.stale_delta_runs_removed += 1
+    if getattr(store, "delta", None) is not None:
+        store.delta = None  # state referred to the replaced graph
 
     # ---- pass 1: degree scan -------------------------------------------
     scan = _DegreeScan(num_vertices)
@@ -406,50 +489,77 @@ def ingest_edge_file(
 
     for src, dst in iter_edge_chunks(path, chunk_edges=chunk_edges, fmt=fmt):
         stats.chunks_pass2 += 1
-        keys = _pack_keys(src, dst)
-        shard_of = np.searchsorted(intervals, dst, side="right") - 1
-        order = np.argsort(shard_of, kind="stable")
-        keys = keys[order]
-        shard_sorted = shard_of[order]
-        # contiguous [start, stop) slices per touched shard
-        touched, starts = np.unique(shard_sorted, return_index=True)
-        stops = np.append(starts[1:], len(keys))
-        for p, lo, hi in zip(touched, starts, stops):
-            buffers[int(p)].append(keys[lo:hi])
-        buffered_bytes += keys.nbytes
+        nbytes_chunk = 0
+        for p, keys in route_edges(intervals, src, dst):
+            buffers[p].append(keys)
+            nbytes_chunk += keys.nbytes
+        buffered_bytes += nbytes_chunk
         stats.peak_buffered_bytes = max(stats.peak_buffered_bytes, buffered_bytes)
         if buffered_bytes >= mem_budget_bytes:
             spill()
 
-    # ---- merge + finalize, one shard at a time -------------------------
-    for p in range(P):
+    # ---- merge + finalize: shards are independent, so ``finalize_workers``
+    # of them merge+write concurrently (stats mutated under one lock; byte
+    # counts measured per shard so parallelism cannot skew them) ----------
+    stats_lock = threading.Lock()
+
+    def _finalize_shard(p: int) -> None:
         v0, v1 = int(intervals[p]), int(intervals[p + 1])
         runs = []
+        spill_read = 0
         for name in run_names[p]:
             raw = store.read_bytes(name)
-            stats.spill_bytes_read += len(raw)
+            spill_read += len(raw)
             runs.append(np.frombuffer(raw, dtype=_KEY_DTYPE))
         if buffers[p]:  # tail edges never spilled: one in-memory run
             runs.append(np.sort(np.concatenate(buffers[p])))
             buffers[p] = []
         merged = kway_merge(runs)
-        stats.max_runs_per_shard = max(stats.max_runs_per_shard, len(runs))
+        n_runs = len(runs)
         del runs
-        dst_local = (merged >> 32) - v0
-        col = (merged & 0xFFFFFFFF).astype(np.int32)
-        counts = np.bincount(dst_local, minlength=v1 - v0)
-        row = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
-        shard = ShardCSR(shard_id=p, v0=v0, v1=v1, row=row, col=col)
-        stats.peak_shard_bytes = max(
-            stats.peak_shard_bytes, merged.nbytes + shard.nbytes
-        )
+        shard = csr_from_keys(p, v0, v1, merged)
+        working_set = merged.nbytes + shard.nbytes
         del merged
-        io0 = store.io.snapshot()
-        store.write_shard(shard, num_vertices=n, window=window, k=k, tr=tr)
-        stats.shard_bytes_written += (store.io - io0).bytes_written
+        capture = {} if warm_bytes > 0 else None
+        store.write_shard(
+            shard, num_vertices=n, window=window, k=k, tr=tr, capture=capture
+        )
+        written = store.file_size(store.shard_name(p, "csr")) + store.file_size(
+            store.shard_name(p, "ell")
+        )
         for name in run_names[p]:  # spill runs are scratch, not the store
             os.remove(store._path(name))
         run_names[p] = []
+        warmed_srcs = 0
+        if warm_sources:
+            store.set_warm_sources(p, np.unique(shard.col).astype(np.int64))
+            warmed_srcs = 1
+        warm_kept = 0
+        if capture is not None:
+            for (cp, cfmt), raw in sorted(capture.items(), key=lambda kv: kv[0][1]):
+                if store.warm_raw_bytes_total() + len(raw) <= warm_bytes:
+                    store.add_warm_raw(cp, cfmt, raw)
+                    warm_kept += len(raw)
+        with stats_lock:
+            stats.spill_bytes_read += spill_read
+            stats.max_runs_per_shard = max(stats.max_runs_per_shard, n_runs)
+            stats.peak_shard_bytes = max(stats.peak_shard_bytes, working_set)
+            stats.shard_bytes_written += written
+            stats.warm_sources_built += warmed_srcs
+            stats.warm_raw_bytes += warm_kept
+
+    if finalize_workers > 1 and P > 1:
+        import concurrent.futures
+
+        with concurrent.futures.ThreadPoolExecutor(
+            max_workers=min(finalize_workers, P),
+            thread_name_prefix="ingest-finalize",
+        ) as pool:
+            for _ in pool.map(_finalize_shard, range(P)):
+                pass  # re-raises worker exceptions
+    else:
+        for p in range(P):
+            _finalize_shard(p)
 
     # ---- stale shards from a previous (larger) ingest ------------------
     p = P
@@ -473,6 +583,6 @@ def ingest_edge_file(
         out_deg=out_deg,
     )
     io0 = store.io.snapshot()
-    store.write_meta(meta)
+    store.write_meta(meta, ell_params={"window": window, "k": k, "tr": tr})
     stats.meta_bytes_written += (store.io - io0).bytes_written
     return meta, stats

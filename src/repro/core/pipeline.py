@@ -93,6 +93,11 @@ class ShardPipeline:
         self.cache = cache
         self.depth = depth
         self.resident = resident  # shard_id -> (csr, ell), engine-owned
+        # Delta snapshot pin (repro.delta): the engine/lane sweep sets this
+        # to the overlay version it pinned for the CURRENT sweep, so every
+        # load — inline or from a prefetch thread — decodes the same graph
+        # version.  None = no overlay, or latest published state.
+        self.pin: Optional[int] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._finalizer = None
 
@@ -120,6 +125,19 @@ class ShardPipeline:
         """Cache lookup -> disk read -> decode, all off the critical path
         when called from a prefetch thread."""
         t0 = time.perf_counter()
+        delta = self.store.delta
+        if delta is not None and delta.has_pending(p, self.pin):
+            # Logical decode: base CSR + pending delta runs at the pinned
+            # version, merged under the overlay's per-shard lock (atomic
+            # against a recompaction swap).  The byte cache keeps the base
+            # CSR container; decoded results are never kept resident while
+            # a shard has pending deltas — recompaction restores that path.
+            obj, from_cache = delta.load_logical(
+                p, self.fmt, pin=self.pin, cache=self.cache
+            )
+            csr, ell = (obj, None) if self.fmt == "csr" else (None, obj)
+            return LoadedShard(p, csr, ell, load_s=time.perf_counter() - t0,
+                               from_cache=from_cache)
         if self.resident is not None and p in self.resident:
             csr, ell = self.resident[p]
             return LoadedShard(p, csr, ell, load_s=time.perf_counter() - t0,

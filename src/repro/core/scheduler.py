@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -38,6 +38,15 @@ class ShardPlan:
     ``shards`` preserves interval order (shard p writes ``DstVertexArray``
     interval p; processing in order keeps the paper's sliding-window access
     pattern and makes consecutive ELL shards batchable by the executor).
+
+    ``lane_masks`` (lane-aware selective scheduling, serving layer): when
+    the planner was given per-lane active sets, ``lane_masks[p][l]`` says
+    whether lane ``l`` may produce updates from shard ``p``.  A planned
+    shard always has at least one True lane; lanes masked False carry their
+    previous interval values — correct for exactly the reason whole-shard
+    skipping is correct, applied per lane (DESIGN.md §6).  ``None`` means
+    every lane needs every planned shard (single-query plans, selective
+    off, or lane masking disabled).
     """
 
     shards: List[int]
@@ -45,6 +54,7 @@ class ShardPlan:
     selective_on: bool
     active_ratio: float
     plan_time_s: float
+    lane_masks: Optional[Dict[int, np.ndarray]] = None
 
     @property
     def num_planned(self) -> int:
@@ -92,26 +102,58 @@ class ShardScheduler:
         ps = list(range(self.meta.num_shards))
         filters: List[BloomFilter] = []
         exact: List[np.ndarray] = []
+        delta = getattr(store, "delta", None)
+        # Ingest-time warmup (PR 3 follow-on): shards whose unique-source
+        # arrays were deposited by the external build (or a recompaction)
+        # need no read at all; container bytes left warm seed the cache
+        # without a read-back either.  Shards with pending deltas are never
+        # cache-warmed here: their cache slot belongs to the overlay's CSR
+        # path, and their pending insert sources are patched in by the
+        # engine's delta refresh right after construction.
+        need_read = [p for p in ps if store.warm_sources(p) is None]
+        src_of: Dict[int, np.ndarray] = {}
         # Chunked bulk reads: a handful of shards resident at a time — the
         # SEM contract (the graph may exceed RAM) forbids materializing
         # every shard's bytes at once.
         chunk = 8
-        for lo in range(0, len(ps), chunk):
-            part = ps[lo: lo + chunk]
+        for lo in range(0, len(need_read), chunk):
+            part = need_read[lo: lo + chunk]
             csr_raws = store.shard_bytes_bulk(part, "csr")
             if warm_cache is not None and cache_fmt != "csr":
                 warm_raws = store.shard_bytes_bulk(part, cache_fmt)
             else:
                 warm_raws = csr_raws  # reuse: no second read of same bytes
             for p in part:
-                srcs = store.decode_csr(p, csr_raws[p]).unique_sources()
-                filters.append(BloomFilter.build(srcs, fp_rate=self.bloom_fp))
-                exact.append(srcs)
-                if warm_cache is not None:
+                src_of[p] = store.decode_csr(p, csr_raws[p]).unique_sources()
+                if warm_cache is not None and not (
+                    delta is not None and delta.has_pending(p)
+                ):
                     warm_cache.put(p, warm_raws[p])
+        for p in ps:
+            srcs = src_of.get(p)
+            if srcs is None:
+                srcs = store.warm_sources(p)
+                if warm_cache is not None and not (
+                    delta is not None and delta.has_pending(p)
+                ):
+                    raw = store.warm_raw(p, cache_fmt)
+                    if raw is not None:
+                        warm_cache.put(p, raw)
+            filters.append(BloomFilter.build(srcs, fp_rate=self.bloom_fp))
+            exact.append(srcs)
         self.filters = filters
         self.exact_sources = exact
         self.loading_io = store.io - io0
+
+    def refresh_shard_sources(self, p: int, srcs: np.ndarray) -> None:
+        """Rebuild one shard's Bloom/exact filter after a delta publish or
+        recompaction (``srcs`` = CURRENT unique sources of the logical
+        shard, or any superset — supersets cost wasted loads, never
+        correctness)."""
+        if self.filters is not None:
+            self.filters[p] = BloomFilter.build(srcs, fp_rate=self.bloom_fp)
+        if self.exact_sources is not None:
+            self.exact_sources[p] = srcs
 
     # ----------------------------------------------------------- decisions
     def shard_is_active(self, p: int, active_ids: np.ndarray) -> bool:
@@ -122,8 +164,24 @@ class ShardScheduler:
             return bool(np.isin(active_ids, srcs, assume_unique=False).any())
         return self.filters[p].any_member(active_ids)
 
-    def plan(self, active_ids: np.ndarray) -> ShardPlan:
-        """Emit this iteration's ordered shard plan."""
+    def plan(
+        self,
+        active_ids: np.ndarray,
+        *,
+        lane_active: Optional[Sequence[np.ndarray]] = None,
+    ) -> ShardPlan:
+        """Emit this iteration's ordered shard plan.
+
+        ``active_ids`` is the (union) active vertex set.  ``lane_active``
+        optionally carries the per-lane active sets of a lane sweep; when
+        selective scheduling engages, the plan then also computes a
+        per-shard LANE MASK so the sweep can skip dispatch rows for lanes
+        with no active source in the shard (ROADMAP "lane-aware selective
+        scheduling" — compute saving; the shard is loaded once regardless).
+        Masks can only be computed when selective is on, which implies every
+        individual lane is below the threshold too (each lane's active set
+        is a subset of the union).
+        """
         t0 = time.perf_counter()
         active_ratio = len(active_ids) / max(self.meta.num_vertices, 1)
         use_selective = (
@@ -141,12 +199,28 @@ class ShardScheduler:
             )
         planned: List[int] = []
         skipped: List[int] = []
-        for p in range(self.meta.num_shards):
-            (planned if self.shard_is_active(p, active_ids) else skipped).append(p)
+        lane_masks: Optional[Dict[int, np.ndarray]] = None
+        if lane_active is not None and len(lane_active) > 1:
+            lane_masks = {}
+            for p in range(self.meta.num_shards):
+                mask = np.fromiter(
+                    (self.shard_is_active(p, ids) for ids in lane_active),
+                    dtype=bool,
+                    count=len(lane_active),
+                )
+                if mask.any():
+                    planned.append(p)
+                    lane_masks[p] = mask
+                else:
+                    skipped.append(p)
+        else:
+            for p in range(self.meta.num_shards):
+                (planned if self.shard_is_active(p, active_ids) else skipped).append(p)
         return ShardPlan(
             shards=planned,
             skipped=skipped,
             selective_on=True,
             active_ratio=active_ratio,
             plan_time_s=time.perf_counter() - t0,
+            lane_masks=lane_masks,
         )

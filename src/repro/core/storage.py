@@ -29,6 +29,11 @@ from .sharding import GraphMeta, ShardCSR
 
 __all__ = ["IOStats", "ShardStore"]
 
+#: npz container keys of one delta run file (repro.delta): destination-
+#: sorted ``(dst<<32|src)`` insert keys plus unique tombstone keys.
+DELTA_RUN_PREFIX = "delta_run_"
+DELTA_MANIFEST = "delta_manifest.json"
+
 
 @dataclasses.dataclass
 class IOStats:
@@ -106,6 +111,62 @@ class ShardStore:
         self._invalidation_hooks: List[Callable[[int], None]] = []
         self._shard_gen: Dict[int, int] = {}
         self._gen_lock = threading.Lock()
+        # Ingest-time warmup (PR 3 follow-on): the finalize step of
+        # ``ingest`` already holds each shard's bytes and CSR arrays, so it
+        # deposits per-shard unique-source arrays (Bloom filter inputs) and
+        # optionally raw container bytes here.  Engine boot consumes them
+        # instead of re-reading every shard (scheduler.build_filters).
+        # In-memory only — a fresh process re-derives them lazily.
+        self._warm_lock = threading.Lock()
+        self._warm_sources: Dict[int, "np.ndarray"] = {}
+        self._warm_raw: Dict[Tuple[int, str], bytes] = {}
+        # Live-mutation state (repro.delta): a DeltaOverlay tracking pending
+        # per-shard delta runs.  Attached lazily — on first EdgeLog use, or
+        # at open time when delta run files / a manifest are found on disk
+        # (a store carrying unabsorbed mutations must boot with them).
+        self.delta = None
+        self._ell_params: Optional[Dict[str, int]] = None
+        if os.path.exists(os.path.join(root, DELTA_MANIFEST)) or any(
+            f.startswith(DELTA_RUN_PREFIX) for f in os.listdir(root)
+        ):
+            self.ensure_delta()
+
+    def ensure_delta(self):
+        """Attach (or return) this store's :class:`~repro.delta.DeltaOverlay`,
+        recovering any published delta runs already on disk."""
+        if self.delta is None:
+            from repro.delta.overlay import DeltaOverlay  # lazy: avoid cycle
+
+            self.delta = DeltaOverlay(self)
+        return self.delta
+
+    # ------------------------------------------------------- ingest warmup
+    def set_warm_sources(self, p: int, srcs) -> None:
+        with self._warm_lock:
+            self._warm_sources[p] = srcs
+
+    def warm_sources(self, p: int):
+        """Unique source ids of shard ``p`` if a producer left them warm."""
+        with self._warm_lock:
+            return self._warm_sources.get(p)
+
+    def add_warm_raw(self, p: int, fmt: str, raw: bytes) -> None:
+        with self._warm_lock:
+            self._warm_raw[(p, fmt)] = raw
+
+    def warm_raw(self, p: int, fmt: str) -> Optional[bytes]:
+        with self._warm_lock:
+            return self._warm_raw.get((p, fmt))
+
+    def warm_raw_bytes_total(self) -> int:
+        with self._warm_lock:
+            return sum(len(b) for b in self._warm_raw.values())
+
+    def _drop_warm(self, p: int) -> None:
+        with self._warm_lock:
+            self._warm_sources.pop(p, None)
+            self._warm_raw.pop((p, "csr"), None)
+            self._warm_raw.pop((p, "ell"), None)
 
     # ------------------------------------------------------------------ raw
     def _path(self, name: str) -> str:
@@ -165,7 +226,12 @@ class ShardStore:
         with self._gen_lock:
             return self._shard_gen.get(p, 0)
 
-    def invalidate_shard(self, p: int) -> None:
+    def invalidate_shard(self, p: int, *, drop_warm: bool = True) -> None:
+        """Bump the shard's generation and fire the hooks.  ``drop_warm=False``
+        is the delta-publish case: base bytes are unchanged (warm base-source
+        arrays stay valid) but decoded/cached copies are stale."""
+        if drop_warm:
+            self._drop_warm(p)  # producers re-deposit after a rewrite
         with self._gen_lock:
             self._shard_gen[p] = self._shard_gen.get(p, 0) + 1
         for hook in list(self._invalidation_hooks):
@@ -175,18 +241,56 @@ class ShardStore:
         return os.path.getsize(self._path(name))
 
     # ------------------------------------------------------------- metadata
-    def write_meta(self, meta: GraphMeta) -> None:
+    def write_meta(
+        self, meta: GraphMeta, *, ell_params: Optional[Dict[str, int]] = None
+    ) -> None:
         prop = {
             "num_vertices": meta.num_vertices,
             "num_edges": meta.num_edges,
             "num_shards": meta.num_shards,
             "intervals": meta.intervals.tolist(),
         }
+        if ell_params is None:
+            if self._ell_params is None and self.exists("property.json"):
+                # fresh process rewriting the metadata of an existing store
+                # (e.g. a delta publish): carry the persisted block forward
+                # instead of silently dropping it
+                old = json.loads(self.read_bytes("property.json"))
+                if "ell" in old:
+                    self._ell_params = {
+                        k: int(v) for k, v in old["ell"].items()
+                    }
+            ell_params = self._ell_params
+        if ell_params is not None:
+            # Persisted so the delta overlay can rebuild the device (ELL)
+            # format of a mutated shard without reading the base ELL file.
+            prop["ell"] = {k: int(ell_params[k]) for k in ("window", "k", "tr")}
+            self._ell_params = prop["ell"]
         self.write_bytes("property.json", json.dumps(prop).encode())
         self.write_bytes(
             "vertexinfo.npz",
             _save_npz_bytes(in_deg=meta.in_deg, out_deg=meta.out_deg),
         )
+
+    def ell_params(self) -> Dict[str, int]:
+        """The (window, k, tr) every shard of this store was encoded with.
+
+        Prefers the ``ell`` block of ``property.json``; legacy stores fall
+        back to one read of shard 0's ELL container header.
+        """
+        if self._ell_params is None:
+            if self.exists("property.json"):
+                prop = json.loads(self.read_bytes("property.json"))
+                if "ell" in prop:
+                    self._ell_params = {
+                        k: int(v) for k, v in prop["ell"].items()
+                    }
+            if self._ell_params is None:
+                ell = self.decode_ell(0, self.shard_bytes(0, "ell"))
+                self._ell_params = {
+                    "window": ell.window, "k": ell.k, "tr": ell.tr
+                }
+        return self._ell_params
 
     def read_meta(self) -> GraphMeta:
         prop = json.loads(self.read_bytes("property.json"))
@@ -220,6 +324,7 @@ class ShardStore:
         window: int,
         k: int,
         tr: int,
+        capture: Optional[Dict[Tuple[int, str], bytes]] = None,
     ) -> EllShard:
         """Persist CSR + derived device (ELL) format; returns the EllShard.
 
@@ -251,6 +356,14 @@ class ShardStore:
         )
         self.write_bytes(self.shard_name(shard.shard_id, "csr"), csr_raw)
         self.write_bytes(self.shard_name(shard.shard_id, "ell"), ell_raw)
+        if capture is not None:
+            # Ingest-time cache warmup: hand the already-encoded container
+            # bytes back to the caller so they can seed a cache without a
+            # read-back through the accounted channel.
+            capture[(shard.shard_id, "csr")] = csr_raw
+            capture[(shard.shard_id, "ell")] = ell_raw
+        if self._ell_params is None:
+            self._ell_params = {"window": window, "k": k, "tr": tr}
         if overwrite:
             self.invalidate_shard(shard.shard_id)
         return ell
@@ -310,7 +423,15 @@ class ShardStore:
             tile_window=z["tile_window"], nnz=nnz,
         )
 
-    def load_shard(self, p: int, fmt: str = "csr"):
+    def load_shard(self, p: int, fmt: str = "csr", *, pin: Optional[int] = None):
+        """Load ONE LOGICAL shard: base container plus any pending delta
+        runs merged in (repro.delta).  ``pin`` selects the delta snapshot
+        (publish sequence) to decode at; ``None`` means the latest published
+        state.  Without an attached overlay (or with none pending for this
+        shard) this is a plain base read+decode.
+        """
+        if self.delta is not None and self.delta.has_pending(p, pin):
+            return self.delta.load_logical(p, fmt, pin=pin)[0]
         raw = self.shard_bytes(p, fmt)
         if fmt == "csr":
             return self.decode_csr(p, raw)
@@ -321,9 +442,17 @@ class ShardStore:
         """Bulk read + decode convenience (all raws resident at once —
         callers that need streaming should chunk their own
         :meth:`shard_bytes_bulk` calls instead)."""
-        raws = self.shard_bytes_bulk(ps, fmt, max_workers=max_workers)
+        pin = self.delta.version if self.delta is not None else None
+        dirty = [
+            p for p in ps
+            if self.delta is not None and self.delta.has_pending(p, pin)
+        ]
+        clean = [p for p in ps if p not in set(dirty)]
+        out = {p: self.load_shard(p, fmt, pin=pin) for p in dirty}
+        raws = self.shard_bytes_bulk(clean, fmt, max_workers=max_workers)
         decode = self.decode_csr if fmt == "csr" else self.decode_ell
-        return {p: decode(p, raw) for p, raw in raws.items()}
+        out.update({p: decode(p, raw) for p, raw in raws.items()})
+        return out
 
     # ------------------------------------------------------------ ingestion
     def ingest(
@@ -339,6 +468,9 @@ class ShardStore:
         k: int = 128,
         tr: int = 8,
         fmt: Optional[str] = None,
+        finalize_workers: int = 1,
+        warm_sources: bool = True,
+        warm_bytes: int = 0,
     ) -> Tuple["GraphMeta", "object"]:
         """Stream an on-disk edge file into this store — the out-of-core
         counterpart of ``preprocess`` + ``write_meta``/``write_shard``.
@@ -366,6 +498,9 @@ class ShardStore:
             k=k,
             tr=tr,
             fmt=fmt,
+            finalize_workers=finalize_workers,
+            warm_sources=warm_sources,
+            warm_bytes=warm_bytes,
         )
 
     # ------------------------------------------------------ auxiliary blobs

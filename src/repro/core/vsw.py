@@ -37,6 +37,7 @@ for compatibility.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import weakref
@@ -192,12 +193,70 @@ class VSWEngine:
             resident=self._device_shards if self.device_resident else None,
         )
         self.executor = make_executor(backend, batch_shards=batch_shards)
+        # Live-mutation state (repro.delta): last overlay version whose
+        # metadata/filter changes this engine has absorbed.  Refreshing at
+        # sweep start (never mid-sweep) is what keeps a sweep's degrees,
+        # filters and shard decodes on ONE graph version.
+        self._delta_seen = -1
+        self._refresh_delta_state()
 
     def _on_shard_invalidated(self, p: int) -> None:
         """Store callback: shard ``p`` was overwritten/removed on disk."""
         if self.cache is not None:
             self.cache.invalidate(p)
         self._device_shards.pop(p, None)
+
+    # ------------------------------------------------------- live mutations
+    def _refresh_delta_state(self) -> None:
+        """Absorb graph mutations published since this engine's last sweep:
+        refresh the resident degree arrays / edge count (``pre`` divides by
+        out-degree!) and rebuild the Bloom/exact filters of every shard a
+        publish touched — base sources (warm, or one read) plus pending
+        insert sources.  Deleted sources are NOT removed until the shard
+        recompacts: a superset filter costs a wasted load, never
+        correctness.  Called only between sweeps."""
+        delta = self.store.delta
+        if delta is None:
+            return
+        v = delta.version
+        if v == self._delta_seen:
+            return
+        m = self.store.read_meta()
+        # in-place: the scheduler and any live LaneSweep share this object
+        self.meta.in_deg[:] = m.in_deg
+        self.meta.out_deg[:] = m.out_deg
+        self.meta.num_edges = m.num_edges
+        for p in delta.publishes_since(self._delta_seen):
+            srcs = self.store.warm_sources(p)
+            if srcs is None:
+                srcs = self.store.decode_csr(
+                    p, self.store.shard_bytes(p, "csr")
+                ).unique_sources()
+                self.store.set_warm_sources(p, srcs)
+            pend = delta.pending_insert_sources(p, v)
+            if len(pend):
+                srcs = np.union1d(srcs, pend)
+            self.scheduler.refresh_shard_sources(p, srcs)
+        self._delta_seen = v
+
+    @contextlib.contextmanager
+    def _sweep_session(self):
+        """One sweep's delta scope: absorb published mutations, then pin the
+        overlay version so every shard decode in the sweep — including
+        prefetch threads — sees the same snapshot, and background
+        recompaction cannot absorb runs this sweep still needs."""
+        self._refresh_delta_state()
+        delta = self.store.delta
+        if delta is None:
+            yield None
+            return
+        pin = delta.acquire_pin()
+        self.pipeline.pin = pin
+        try:
+            yield pin
+        finally:
+            self.pipeline.pin = None
+            delta.release_pin(pin)
 
     # ------------------------------------------------------------- factory
     @classmethod
@@ -328,6 +387,20 @@ class VSWEngine:
         *,
         max_iters: int = 100,
         record_values_history: bool = False,
+    ) -> RunResult:
+        with self._sweep_session():
+            return self._run_pinned(
+                program,
+                max_iters=max_iters,
+                record_values_history=record_values_history,
+            )
+
+    def _run_pinned(
+        self,
+        program: VertexProgram,
+        *,
+        max_iters: int,
+        record_values_history: bool,
     ) -> RunResult:
         meta = self.meta
         src_vals, active_mask = program.init(meta)

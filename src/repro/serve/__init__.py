@@ -25,7 +25,7 @@ service     :class:`~repro.serve.service.GraphService` — request queue,
 """
 
 from .batcher import LaneBatcher, pad_lanes
-from .service import GraphService, QueryResult, ServiceOverloaded
+from .service import GraphService, QueryResult, ServiceOverloaded, UpdateResult
 from .session import SessionCache
 from .sweep import LaneResult, LaneSeed, LaneSweep, SweepIterStats
 
@@ -33,6 +33,7 @@ __all__ = [
     "GraphService",
     "QueryResult",
     "ServiceOverloaded",
+    "UpdateResult",
     "LaneBatcher",
     "pad_lanes",
     "SessionCache",

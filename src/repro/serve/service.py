@@ -59,6 +59,39 @@ class QueryResult:
     shard_loads: float  # this query's share of shard fetches
     lanes: int  # lane capacity of the sweep that served it
     cached: bool = False  # served from the session cache
+    # The graph version this result was computed at.  Every sweep runs
+    # pinned to ONE version (updates publish strictly between sweeps), so
+    # a result is never a mix of two edge states — tests assert values
+    # match a from-scratch build of exactly this version's edge list.
+    graph_version: int = 0
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """One applied mutation batch: the version that made it visible.
+
+    ``edges_inserted`` / ``edges_removed`` / ``shards_touched`` describe
+    the PUBLISH GROUP the batch rode in: batches staged while the worker
+    was busy are folded into one publish (one version bump), and every
+    batch's future reports that group's aggregate extent, not a per-batch
+    split.
+    """
+
+    graph_version: int
+    edges_inserted: int
+    edges_removed: int
+    shards_touched: Tuple[int, ...]
+    latency_s: float
+
+
+@dataclasses.dataclass
+class _PendingUpdate:
+    """One staged ``apply_updates`` batch awaiting the next publish point."""
+
+    inserts: Optional[Tuple]
+    deletes: Optional[Tuple]
+    future: "Future[UpdateResult]"
+    t_submit: float
 
 
 @dataclasses.dataclass
@@ -91,6 +124,8 @@ class GraphService:
         session_entries: int = 256,
         max_pending: Optional[int] = None,
         graph_version: int = 0,
+        lane_selective: bool = True,
+        auto_compact_runs: Optional[int] = None,
     ):
         self.engine = engine
         self.batcher = LaneBatcher(max_lanes, pad_pow2=pad_pow2)
@@ -98,8 +133,11 @@ class GraphService:
         self.batch_shards = batch_shards
         self.max_pending = max_pending
         self.graph_version = graph_version
+        self.lane_selective = lane_selective
 
         self._pending: Deque[_Pending] = deque()
+        self._updates: Deque["_PendingUpdate"] = deque()
+        self._edge_log = None  # lazy: most services never mutate
         self._cond = threading.Condition()
         self._closed = False
         self._engine_closed = False
@@ -107,8 +145,21 @@ class GraphService:
         # aggregate counters (worker-thread writes, snapshot under the lock)
         self._queries_done = 0
         self._sweeps = 0
+        self._updates_done = 0
         self._bytes_read = 0.0
         self._shard_loads = 0.0
+        # LSM-style background maintenance: absorb pending delta runs into
+        # base shards once a shard accumulates ``auto_compact_runs`` runs.
+        # The recompactor coordinates with sweeps via overlay pins, so it is
+        # safe to run while queries are in flight.
+        self._recompactor = None
+        if auto_compact_runs is not None:
+            from repro.delta import Recompactor
+
+            self._recompactor = Recompactor(
+                engine.store, min_runs=auto_compact_runs
+            )
+            self._recompactor.start()
         self._worker = threading.Thread(
             target=self._serve_loop, name="graphserve-worker", daemon=True
         )
@@ -127,6 +178,8 @@ class GraphService:
         "session_entries",
         "max_pending",
         "graph_version",
+        "lane_selective",
+        "auto_compact_runs",
     )
 
     @classmethod
@@ -236,15 +289,89 @@ class GraphService:
             program, source, max_iters=max_iters, **params
         ).result()
 
+    # ------------------------------------------------------------- updates
+    def apply_updates(
+        self, inserts=None, deletes=None
+    ) -> "Future[UpdateResult]":
+        """Stage one edge-mutation batch; the future resolves once the
+        batch is PUBLISHED (durable delta runs + new graph version).
+
+        Updates become visible atomically between sweeps: queries already
+        riding a sweep finish on the version they started at; any query
+        batch formed after the publish runs on the new version.  Batch
+        semantics (deletes before inserts, delete removes all copies) are
+        :class:`repro.delta.EdgeLog`'s.  Vertex ids must lie in the store's
+        fixed ``[0, num_vertices)`` range.
+        """
+        if self._closed:
+            raise RuntimeError("GraphService is closed")
+        from repro.delta.edgelog import _norm_edges  # validate on caller thread
+
+        n = self.engine.meta.num_vertices
+        ins = _norm_edges(inserts, n, "inserts")
+        dels = _norm_edges(deletes, n, "deletes")
+        fut: "Future[UpdateResult]" = Future()
+        upd = _PendingUpdate(
+            inserts=ins, deletes=dels, future=fut,
+            t_submit=time.perf_counter(),
+        )
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("GraphService is closed")
+            self._updates.append(upd)
+            self._cond.notify_all()
+        return fut
+
+    def _publish_updates(self, updates: List[_PendingUpdate]) -> None:
+        """Publish staged mutation batches (worker thread, between sweeps)."""
+        if self._edge_log is None:
+            from repro.delta import EdgeLog
+
+            self._edge_log = EdgeLog(self.engine.store)
+        try:
+            for u in updates:
+                self._edge_log.append(inserts=u.inserts, deletes=u.deletes)
+            pub = self._edge_log.publish()
+        except BaseException as exc:
+            for u in updates:
+                if not u.future.done():
+                    u.future.set_exception(exc)
+            return
+        with self._cond:
+            self.graph_version += 1
+            version = self.graph_version
+            self._updates_done += len(updates)
+        self.sessions.drop_stale_versions(version)
+        for u in updates:
+            u.future.set_result(
+                UpdateResult(
+                    graph_version=version,
+                    edges_inserted=pub.edges_inserted,
+                    edges_removed=pub.edges_removed,
+                    shards_touched=pub.shards_touched,
+                    latency_s=time.perf_counter() - u.t_submit,
+                )
+            )
+
     # --------------------------------------------------------- worker loop
     def _serve_loop(self) -> None:
         while True:
             with self._cond:
-                while not self._pending and not self._closed:
+                while (
+                    not self._pending and not self._updates and not self._closed
+                ):
                     self._cond.wait()
-                if not self._pending and self._closed:
+                if not self._pending and not self._updates and self._closed:
                     return
-                batch = self.batcher.form(self._pending)
+                updates: List[_PendingUpdate] = list(self._updates)
+                self._updates.clear()
+                batch = self.batcher.form(self._pending) if self._pending else []
+            if updates:
+                # publish BEFORE the next sweep: the batch just formed (and
+                # everything after it) runs on the new version; in-flight
+                # work already finished — sweeps and publishes share this
+                # worker thread, so they can never interleave.
+                self._publish_updates(updates)
             if batch:
                 self._run_batch(batch)
 
@@ -254,6 +381,9 @@ class GraphService:
         capacity = self.batcher.capacity(len(batch))
         resolved: set = set()
         admitted: List[_Pending] = list(batch)  # incl. mid-sweep backfills
+        # The whole sweep — including lanes backfilled mid-flight — runs at
+        # this version: publishes only happen on this thread between sweeps.
+        version = self.graph_version
 
         def backfill(n_free: int) -> List[LaneSeed]:
             with self._cond:
@@ -277,11 +407,12 @@ class GraphService:
                 bytes_read=res.bytes_read,
                 shard_loads=res.shard_loads,
                 lanes=capacity,
+                graph_version=version,
             )
             # Cache a private copy: the caller owns ``qr.values`` and may
             # mutate it; later hits must still see the computed result.
             self.sessions.put(
-                (p.prog.key, p.source, self.graph_version),
+                (p.prog.key, p.source, version),
                 dataclasses.replace(qr, values=res.values.copy()),
             )
             resolved.add(p.request_id)
@@ -300,6 +431,7 @@ class GraphService:
             prog,
             batch_shards=self.batch_shards,
             pad_pow2=self.batcher.pad_pow2,
+            lane_selective=self.lane_selective,
         )
         try:
             sweep.run(seeds, backfill=backfill, on_retire=on_retire)
@@ -316,7 +448,7 @@ class GraphService:
         """Aggregate serving counters (loads/bytes are lane-attributed)."""
         with self._cond:
             done = self._queries_done
-            return {
+            out = {
                 "queries_completed": done,
                 "sweeps": self._sweeps,
                 "pending": len(self._pending),
@@ -325,13 +457,34 @@ class GraphService:
                 "loads_per_query": self._shard_loads / done if done else 0.0,
                 "session_hits": self.sessions.hits,
                 "session_misses": self.sessions.misses,
+                "updates_published": self._updates_done,
+                "updates_pending": len(self._updates),
+                "graph_version": self.graph_version,
             }
+        delta = self.engine.store.delta
+        out["dirty_shards"] = len(delta.dirty_shards()) if delta else 0
+        if self._recompactor is not None:
+            out["shards_compacted"] = self._recompactor.total.shards_compacted
+        return out
 
     def bump_graph_version(self) -> int:
-        """Invalidate all cached results (graph changed underneath)."""
+        """Invalidate all cached results (graph changed underneath).
+        For actual edge mutations use :meth:`apply_updates`, which bumps
+        the version itself at the publish point."""
         with self._cond:
             self.graph_version += 1
-            return self.graph_version
+            v = self.graph_version
+        self.sessions.drop_stale_versions(v)
+        return v
+
+    def compact(self):
+        """Synchronously absorb every pending delta run into the base
+        shards (safe while serving — coordinates with sweeps via overlay
+        pins).  Returns :class:`repro.delta.CompactionStats`."""
+        from repro.delta import Recompactor
+
+        rc = self._recompactor or Recompactor(self.engine.store)
+        return rc.compact(rc.dirty_shards())
 
     # ----------------------------------------------------------- lifecycle
     def close(self, *, close_engine: bool = True) -> None:
@@ -344,7 +497,10 @@ class GraphService:
             self._closed = True
             self._cond.notify_all()
         if not already and self._worker.is_alive():
-            self._worker.join()
+            self._worker.join()  # drains queued queries AND staged updates
+        if self._recompactor is not None:
+            self._recompactor.stop()
+            self._recompactor = None
         if close_engine and not self._engine_closed:
             self._engine_closed = True
             self.engine.close()

@@ -60,6 +60,26 @@ class SessionCache:
             while len(self._items) > self.capacity:
                 self._items.popitem(last=False)  # evict LRU
 
+    def drop_stale_versions(self, current_version: int) -> int:
+        """Remove entries cached under an older graph version.
+
+        Version keys already make stale entries unreachable (lookups use
+        the CURRENT version); this reclaims their capacity eagerly after a
+        graph update instead of letting dead entries crowd out live ones.
+        Keys are ``(program_key, source, graph_version)`` tuples — finer,
+        per-shard invalidation would be unsound without tracking which
+        shards each query's result depends on (any edge mutation can move
+        any downstream distance/score).  Returns the number dropped.
+        """
+        with self._lock:
+            stale = [
+                k for k in self._items
+                if isinstance(k, tuple) and k and k[-1] != current_version
+            ]
+            for k in stale:
+                del self._items[k]
+            return len(stale)
+
     def clear(self) -> None:
         with self._lock:
             self._items.clear()

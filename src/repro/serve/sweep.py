@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.apps import LaneProgram
 from repro.core.executor import ExecStats, make_lane_executor
 from repro.core.pipeline import PipelineStats
+from repro.core.scheduler import ShardPlan
 from repro.core.vsw import VSWEngine
 
 from .batcher import pad_lanes
@@ -78,6 +79,9 @@ class SweepIterStats:
     retired: int
     backfilled: int
     time_s: float
+    # lane-aware selective scheduling: dispatch rows (shard x lane pairs)
+    # skipped because the lane had no active source in the shard
+    lane_rows_skipped: int = 0
 
 
 class LaneSweep:
@@ -90,10 +94,16 @@ class LaneSweep:
         *,
         batch_shards: int = 1,
         pad_pow2: bool = True,
+        lane_selective: bool = True,
     ):
         self.engine = engine
         self.program = program
         self.pad_pow2 = pad_pow2
+        # Lane-aware selective scheduling: when the union plan is selective,
+        # also skip dispatch ROWS for lanes whose Bloom filter matches no
+        # active vertex of the shard (the shard still loads once).  Same
+        # bitwise argument as whole-shard skipping, per lane (DESIGN.md §6).
+        self.lane_selective = lane_selective
         self.executor = make_lane_executor(
             engine.backend_name, batch_shards=batch_shards
         )
@@ -173,89 +183,169 @@ class LaneSweep:
         pstats = PipelineStats()
         xstats = ExecStats()
         it = 0
-        while live.any():
-            t0 = time.perf_counter()
-            io0 = engine.store.io.snapshot()
-            pstats.reset()
-            xstats.reset()
+        # One pinned delta session for the WHOLE sweep: mutations published
+        # while lanes are in flight become visible to the NEXT sweep, never
+        # mid-query — every result is computed at exactly one graph version.
+        with engine._sweep_session():
+            while live.any():
+                t0 = time.perf_counter()
+                io0 = engine.store.io.snapshot()
+                pstats.reset()
+                xstats.reset()
 
-            union_ids = np.flatnonzero(active[live].any(axis=0)).astype(np.int64)
-            plan = engine.scheduler.plan(union_ids)
-            msgs = prog.pre(vals, meta.out_deg).astype(np.float32)
-            dst = vals.copy()  # carried over for skipped shards
+                live_slots = np.flatnonzero(live)
+                union_ids = np.flatnonzero(active[live].any(axis=0)).astype(np.int64)
+                lane_active = None
+                if self.lane_selective and len(live_slots) > 1:
+                    lane_active = [
+                        np.flatnonzero(active[k]).astype(np.int64)
+                        for k in live_slots
+                    ]
+                plan = engine.scheduler.plan(union_ids, lane_active=lane_active)
+                msgs = prog.pre(vals, meta.out_deg).astype(np.float32)
+                dst = vals.copy()  # carried over for skipped shards/lanes
 
-            loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
-            for res in self.executor.run(loaded, msgs, prog.combine, xstats):
+                loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
+                rows_skipped = 0
+                if plan.lane_masks is None:
+                    for res in self.executor.run(loaded, msgs, prog.combine, xstats):
+                        new = prog.apply(
+                            np.asarray(res.acc, dtype=vals.dtype),
+                            vals[:, res.v0: res.v1],
+                            meta,
+                            res.v0,
+                            sources,
+                        )
+                        dst[:, res.v0: res.v1] = new
+                else:
+                    rows_skipped = self._run_masked(
+                        plan, loaded, live_slots, msgs, vals, dst,
+                        sources, xstats,
+                    )
+                # Retired / free lanes stay frozen at their final values.
+                dst[~live] = vals[~live]
+
+                new_active = prog.is_active(dst, vals)
+                new_active[~live] = False
+                vals, active = dst, new_active
+                lane_iters[live] += 1
+
+                # --------------------------------- per-lane cost attribution
+                dio = engine.store.io - io0
+                n_live = int(live.sum())
+                lane_bytes[live] += dio.bytes_read / n_live
+                lane_loads[live] += plan.num_planned / n_live
+
+                # ----------------------------------- retirement + backfill
+                retired = 0
+                for k in np.flatnonzero(live):
+                    seed = lane_seed[k]
+                    converged = not active[k].any()
+                    if converged or lane_iters[k] >= seed.max_iters:
+                        live[k] = False
+                        active[k] = False
+                        retired += 1
+                        res_k = LaneResult(
+                            token=seed.token,
+                            source=seed.source,
+                            values=vals[k].copy(),
+                            iterations=int(lane_iters[k]),
+                            converged=converged,
+                            bytes_read=float(lane_bytes[k]),
+                            shard_loads=float(lane_loads[k]),
+                        )
+                        results.append(res_k)
+                        if on_retire is not None:
+                            on_retire(res_k)
+
+                backfilled = 0
+                if backfill is not None:
+                    free = list(np.flatnonzero(~live))
+                    while free:
+                        got = list(backfill(len(free)))
+                        if not got:
+                            break
+                        for seed in got:
+                            if seed.max_iters <= 0:
+                                finish_zero_budget(seed)  # slot stays free
+                            else:
+                                admit(int(free.pop(0)), seed)
+                                backfilled += 1
+
+                self.iter_stats.append(
+                    SweepIterStats(
+                        iteration=it,
+                        live_lanes=n_live,
+                        shards_processed=plan.num_planned,
+                        shards_skipped=plan.num_skipped,
+                        bytes_read=dio.bytes_read,
+                        selective_on=plan.selective_on,
+                        retired=retired,
+                        backfilled=backfilled,
+                        time_s=time.perf_counter() - t0,
+                        lane_rows_skipped=rows_skipped,
+                    )
+                )
+                it += 1
+        return results
+
+    # ------------------------------------------------- lane-masked dispatch
+    def _run_masked(
+        self,
+        plan: ShardPlan,
+        loaded,
+        live_slots: np.ndarray,
+        msgs: np.ndarray,
+        vals: np.ndarray,
+        dst: np.ndarray,
+        sources: np.ndarray,
+        xstats: ExecStats,
+    ) -> int:
+        """Execute the plan with per-shard lane masks: consecutive shards
+        sharing a mask are dispatched together (preserving shard batching)
+        on ONLY the masked lanes' message rows; unmasked lanes keep their
+        carried values for that interval.  Returns skipped dispatch rows.
+
+        Message sub-matrices are padded to pow2 lane counts (same shape
+        discipline as the batcher) so jit'd lane kernels see bounded
+        shapes; padding rows are zeros and their results are discarded.
+        """
+        prog, meta = self.program, self.engine.meta
+        batch = getattr(self.executor, "batch_shards", 1)
+        n_live = len(live_slots)
+        rows_skipped = 0
+        group: List = []
+        group_mask: Optional[np.ndarray] = None
+
+        def flush() -> None:
+            nonlocal group, group_mask, rows_skipped
+            if not group:
+                return
+            slots = live_slots[group_mask]
+            m = len(slots)
+            cap_sub = pad_lanes(m) if self.pad_pow2 else m
+            sub = np.zeros((cap_sub, msgs.shape[1]), dtype=msgs.dtype)
+            sub[:m] = msgs[slots]
+            for res in self.executor.run(group, sub, prog.combine, xstats):
+                acc = np.asarray(res.acc, dtype=vals.dtype)[:m]
                 new = prog.apply(
-                    np.asarray(res.acc, dtype=vals.dtype),
-                    vals[:, res.v0: res.v1],
+                    acc,
+                    vals[slots, res.v0: res.v1],
                     meta,
                     res.v0,
-                    sources,
+                    sources[slots],
                 )
-                dst[:, res.v0: res.v1] = new
-            # Retired / free lanes stay frozen at their final values.
-            dst[~live] = vals[~live]
+                dst[slots, res.v0: res.v1] = new
+            rows_skipped += (n_live - m) * len(group)
+            group, group_mask = [], None
 
-            new_active = prog.is_active(dst, vals)
-            new_active[~live] = False
-            vals, active = dst, new_active
-            lane_iters[live] += 1
-
-            # ------------------------------------- per-lane cost attribution
-            dio = engine.store.io - io0
-            n_live = int(live.sum())
-            lane_bytes[live] += dio.bytes_read / n_live
-            lane_loads[live] += plan.num_planned / n_live
-
-            # --------------------------------------- retirement + backfill
-            retired = 0
-            for k in np.flatnonzero(live):
-                seed = lane_seed[k]
-                converged = not active[k].any()
-                if converged or lane_iters[k] >= seed.max_iters:
-                    live[k] = False
-                    active[k] = False
-                    retired += 1
-                    res_k = LaneResult(
-                        token=seed.token,
-                        source=seed.source,
-                        values=vals[k].copy(),
-                        iterations=int(lane_iters[k]),
-                        converged=converged,
-                        bytes_read=float(lane_bytes[k]),
-                        shard_loads=float(lane_loads[k]),
-                    )
-                    results.append(res_k)
-                    if on_retire is not None:
-                        on_retire(res_k)
-
-            backfilled = 0
-            if backfill is not None:
-                free = list(np.flatnonzero(~live))
-                while free:
-                    got = list(backfill(len(free)))
-                    if not got:
-                        break
-                    for seed in got:
-                        if seed.max_iters <= 0:
-                            finish_zero_budget(seed)  # slot stays free
-                        else:
-                            admit(int(free.pop(0)), seed)
-                            backfilled += 1
-
-            self.iter_stats.append(
-                SweepIterStats(
-                    iteration=it,
-                    live_lanes=n_live,
-                    shards_processed=plan.num_planned,
-                    shards_skipped=plan.num_skipped,
-                    bytes_read=dio.bytes_read,
-                    selective_on=plan.selective_on,
-                    retired=retired,
-                    backfilled=backfilled,
-                    time_s=time.perf_counter() - t0,
-                )
-            )
-            it += 1
-        return results
+        for ls in loaded:
+            mask = plan.lane_masks[ls.shard_id]
+            if group and (
+                len(group) >= batch or not np.array_equal(mask, group_mask)
+            ):
+                flush()
+            group_mask = mask
+            group.append(ls)
+        flush()
+        return rows_skipped

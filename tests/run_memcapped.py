@@ -1,11 +1,13 @@
-"""Run the ingestion tests under a hard address-space cap (CI satellite).
+"""Run the ingestion + delta tests under a hard address-space cap (CI).
 
-The streamed ingestion pipeline promises O(chunk + one shard) peak memory.
-``test_ingest.py`` asserts that with tracemalloc (precise, catches any
-O(|E|) regression); this runner adds defense in depth: the whole pytest
-process runs under ``RLIMIT_AS``, so a regression that dodges tracemalloc
-(native allocations, mmap-backed arrays) still dies loudly with
-``MemoryError`` instead of quietly passing on a big-RAM CI host.
+The streamed ingestion pipeline promises O(chunk + one shard) peak memory,
+and the delta subsystem promises O(affected shard + pending runs) per
+publish/decode.  ``test_ingest.py`` asserts the former with tracemalloc
+(precise, catches any O(|E|) regression); this runner adds defense in
+depth: the whole pytest process runs under ``RLIMIT_AS``, so a regression
+that dodges tracemalloc (native allocations, mmap-backed arrays) still
+dies loudly with ``MemoryError`` instead of quietly passing on a big-RAM
+CI host.
 
 Engine-booting tests (``e2e`` in the name) import jax and are excluded —
 XLA's address-space reservations are unrelated to what this cap guards.
@@ -38,7 +40,14 @@ def main() -> int:
 
     here = os.path.dirname(os.path.abspath(__file__))
     return pytest.main(
-        ["-x", "-q", os.path.join(here, "test_ingest.py"), "-k", "not e2e"]
+        [
+            "-x",
+            "-q",
+            os.path.join(here, "test_ingest.py"),
+            os.path.join(here, "test_delta.py"),
+            "-k",
+            "not e2e",
+        ]
     )
 
 
