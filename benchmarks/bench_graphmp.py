@@ -16,6 +16,13 @@ Mapping to the paper:
                      and bytes-read-per-query at lane budgets K ∈ {1, 4, 16}
                      on the cache-miss-heavy config, plus the bitwise oracle
                      check on a lane-batched result.
+  fig_fusion       — cross-query shard-plan fusion (repro/serve, DESIGN.md
+                     §9): bytes/query and wall time for a mixed
+                     BFS+SSSP+PPR workload at K=16 under (a) per-group
+                     sweeps (PR 2 key-equality batching), (b) fused
+                     same-algebra sweeps, (c) interleaved multi-group
+                     sweeps sharing one shard stream; bitwise oracle
+                     asserted per program.
   fig_ingest       — streamed out-of-core ingestion (repro/core/ingest) vs
                      the in-memory preprocess: peak traced bytes and bytes
                      written as |E| scales past the chunk/spill budget; the
@@ -44,7 +51,7 @@ from __future__ import annotations
 
 import tempfile
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -279,9 +286,12 @@ def fig_serve(rows: List[str], *, quick: bool = False) -> None:
     bytes_per_query: Dict[int, float] = {}
     for lanes in (1, 4, 16):
         with tempfile.TemporaryDirectory() as d:
+            # max_groups=1: measure lane batching alone — the fusion-group
+            # dimension (which would give even K=1 a second concurrent
+            # group) is fig_fusion's subject.
             with GraphService.from_graph(
                 g, d, num_shards=shards, backend="numpy",
-                max_lanes=lanes, session_entries=0,
+                max_lanes=lanes, session_entries=0, max_groups=1,
                 cache_bytes=0, emulate_bw=DISK_BW,
             ) as svc:
                 t0 = time.perf_counter()
@@ -317,6 +327,119 @@ def fig_serve(rows: List[str], *, quick: bool = False) -> None:
     )
     assert bitwise, "lane-batched result diverged from single-query oracle"
     assert amort >= 4.0, f"K=16 amortization {amort:.2f}x below 4x floor"
+
+
+def fig_fusion(rows: List[str], *, quick: bool = False) -> None:
+    """Cross-query shard-plan fusion (ISSUE 5 acceptance).
+
+    A mixed BFS+SSSP+PPR workload at lane budget K=16 on the
+    cache-miss-heavy config (no edge cache, no session cache, throttled
+    storage channel), under three serving policies:
+
+    - ``per_group``: PR 2 key-equality batching — every program runs its
+      own sweeps (``fuse_programs=False``), so G program groups pay G
+      shard streams;
+    - ``fused``: same-algebra programs (BFS+SSSP share the min monoid)
+      fuse into ONE lane table (``max_groups=1``) — one stream for the
+      min programs, another for PPR;
+    - ``interleaved``: different algebra groups additionally share one
+      stream (``max_groups=2``) — each loaded shard is dispatched once
+      per group: G small dispatches, 1 load.
+
+    Bytes-read-per-query must drop strictly at each step, and one result
+    per program is checked bitwise against a solo single-query oracle.
+    """
+    from repro.serve import GraphService
+
+    if quick:
+        g = rmat_graph(5_000, 80_000, seed=9)
+        iters, shards = 3, 6
+    else:
+        g = _mk_graph(seed=9)
+        iters, shards = 5, SHARDS
+    rng = np.random.default_rng(10)
+    # 24 queries (8 per program): the interleaved policy fills its K=16
+    # budget with one 16-lane min group + one 8-lane PPR group, while the
+    # per_group baseline runs one 8-lane sweep per program
+    per_prog = 16 // 2
+    progs = (["bfs"] * per_prog + ["sssp"] * per_prog + ["ppr"] * per_prog)
+    sources = rng.choice(g.num_vertices, size=len(progs),
+                         replace=False).astype(int)
+    workload = list(zip(progs, sources))
+    rng.shuffle(workload)
+    n_queries = len(workload)
+
+    policies = [
+        ("per_group", dict(fuse_programs=False, max_groups=1)),
+        ("fused", dict(fuse_programs=True, max_groups=1)),
+        ("interleaved", dict(fuse_programs=True, max_groups=2)),
+    ]
+    bytes_per_query: Dict[str, float] = {}
+    oracle_vals: Dict[str, Dict[Tuple[str, int], np.ndarray]] = {}
+    for name, kw in policies:
+        with tempfile.TemporaryDirectory() as d:
+            with GraphService.from_graph(
+                g, d, num_shards=shards, backend="numpy",
+                max_lanes=16, session_entries=0,
+                cache_bytes=0, emulate_bw=DISK_BW, **kw,
+            ) as svc:
+                t0 = time.perf_counter()
+                with svc.submit_batch():
+                    futs = [svc.submit(p, int(s), max_iters=iters)
+                            for p, s in workload]
+                results = [f.result() for f in futs]
+                wall = time.perf_counter() - t0
+                st = svc.stats()
+                bpq = st["bytes_read_total"] / n_queries
+                bytes_per_query[name] = bpq
+                oracle_vals[name] = {
+                    (p, int(s)): r.values
+                    for (p, s), r in zip(workload, results)
+                }
+                rows.append(
+                    f"fig_fusion_{name},{wall / n_queries * 1e6:.0f},"
+                    f"bytes_per_query={bpq:.0f}"
+                    f";loads_per_query={st['loads_per_query']:.2f}"
+                    f";sweeps={st['sweeps']}"
+                    f";multi_group_sweeps={st['multi_group_sweeps']}"
+                )
+
+    # bitwise oracle: one result per program from the interleaved run vs
+    # a solo single-query engine
+    checked = {}
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=shards, backend="numpy")
+        for (p, s) in workload:
+            if p in checked:
+                continue
+            solo = eng.run(apps.get_program(p, source=int(s)),
+                           max_iters=iters)
+            checked[p] = bool(
+                np.array_equal(oracle_vals["interleaved"][(p, int(s))],
+                               solo.values)
+            )
+        eng.close()
+    bitwise = all(checked.values())
+    gain_fused = bytes_per_query["per_group"] / max(
+        bytes_per_query["fused"], 1e-9)
+    gain_inter = bytes_per_query["per_group"] / max(
+        bytes_per_query["interleaved"], 1e-9)
+    rows.append(
+        f"fig_fusion_amortization,{gain_inter:.2f},"
+        f"bytes_per_query_per_group_over_interleaved={gain_inter:.2f}x"
+        f";over_fused={gain_fused:.2f}x"
+        f";bitwise_oracle={bitwise}"
+    )
+    assert bitwise, "fused/interleaved result diverged from solo oracle"
+    assert bytes_per_query["fused"] < bytes_per_query["per_group"], (
+        "same-algebra fusion did not reduce bytes/query"
+    )
+    assert bytes_per_query["interleaved"] < bytes_per_query["per_group"], (
+        "multi-group interleaving did not reduce bytes/query"
+    )
+    assert bytes_per_query["interleaved"] < bytes_per_query["fused"], (
+        "interleaving gained nothing over same-algebra fusion alone"
+    )
 
 
 def fig_ingest(rows: List[str], *, quick: bool = False) -> None:
@@ -534,6 +657,7 @@ SECTIONS = {
     "table2_io": lambda rows, quick: table2_io(rows),
     "fig3_pipeline": lambda rows, quick: fig3_pipeline(rows, quick=quick),
     "fig_serve": lambda rows, quick: fig_serve(rows, quick=quick),
+    "fig_fusion": lambda rows, quick: fig_fusion(rows, quick=quick),
     "fig_ingest": lambda rows, quick: fig_ingest(rows, quick=quick),
     "fig_delta": lambda rows, quick: fig_delta(rows, quick=quick),
 }
@@ -552,6 +676,7 @@ def run(rows: List[str], *, quick: bool = False,
     if quick:
         fig3_pipeline(rows, quick=True)
         fig_serve(rows, quick=True)
+        fig_fusion(rows, quick=True)
         fig_ingest(rows, quick=True)
         fig_delta(rows, quick=True)
         return

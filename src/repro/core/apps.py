@@ -28,7 +28,7 @@ from .sharding import GraphMeta
 __all__ = ["VertexProgram", "pagerank", "sssp", "wcc", "bfs",
            "personalized_pagerank", "degree_centrality", "get_program",
            "COMBINE_IDENTITY",
-           "LaneProgram", "lane_bfs", "lane_sssp", "lane_ppr",
+           "LaneProgram", "lane_bfs", "lane_sssp", "lane_wcc", "lane_ppr",
            "get_lane_program", "LANE_PROGRAMS"]
 
 COMBINE_IDENTITY = {"sum": 0.0, "min": np.inf, "max": -np.inf}
@@ -183,7 +183,11 @@ def degree_centrality() -> VertexProgram:
 # program — which is what makes a lane sweep bitwise-equal to K independent
 # single-query runs (tests/test_serve.py).  Per-lane state (the source
 # vertex) is carried explicitly through ``apply`` so lanes can retire and be
-# backfilled mid-sweep without rebuilding closures.
+# backfilled mid-sweep without rebuilding closures.  Lanes of DIFFERENT
+# programs sharing a combine algebra (``combine_key``) may share one lane
+# matrix — the serving layer's lane table applies each lane's own
+# ``pre``/``apply`` (DESIGN.md §9), so BFS, SSSP and WCC queries fuse into
+# one sweep.
 
 
 @dataclasses.dataclass
@@ -192,9 +196,16 @@ class LaneProgram:
 
     Attributes:
       combine:   monoid over in-edge messages (same as VertexProgram).
-      key:       batching-compatibility key — two requests may share a lane
-                 batch iff their programs have equal keys (same algebra AND
-                 same static parameters, e.g. PPR damping).
+      key:       full static identity — program name AND static parameters
+                 (e.g. PPR damping).  Two requests with equal keys run the
+                 exact same per-lane computation; the session cache and the
+                 lane table's vectorized ``pre``/``apply`` grouping key on it.
+      combine_key: fusion-compatibility key, coarser than ``key``.  Lanes
+                 whose programs share a ``combine_key`` may share ONE lane
+                 matrix in one sweep: the shard gather+combine kernel only
+                 depends on the monoid, while ``pre``/``apply``/``is_active``
+                 are row-wise and are applied per lane (grouped by ``key``).
+                 Defaults to ``(combine,)`` — BFS, SSSP and WCC all fuse.
       pre:       (vals [K, n], out_deg [n]) -> messages [K, n].
       apply:     (acc [K, rows], old [K, rows], meta, v0, sources [K]) ->
                  new [K, rows]; ``sources[k]`` is lane k's query source
@@ -210,9 +221,14 @@ class LaneProgram:
     pre: Callable[[np.ndarray, np.ndarray], np.ndarray]
     apply: Callable[..., np.ndarray]
     init_lane: Callable[[GraphMeta, int], Tuple[np.ndarray, np.ndarray]]
+    combine_key: Optional[Tuple] = None
     is_active: Callable[[np.ndarray, np.ndarray], np.ndarray] = (
         lambda new, old: new != old
     )
+
+    def __post_init__(self) -> None:
+        if self.combine_key is None:
+            self.combine_key = (self.combine,)
 
     @property
     def identity(self) -> float:
@@ -248,6 +264,30 @@ def lane_bfs() -> LaneProgram:
     return _lane_min_distance("bfs")
 
 
+def lane_wcc() -> LaneProgram:
+    """Lane-vectorized WCC label propagation (min component id).
+
+    The query ``source`` is ignored — every lane computes the full
+    labelling; the parameter exists so WCC rides the same submit /
+    session-cache / lane-table path as the per-source programs.  Identical
+    algebra (``min`` combine, ``min(acc, old)`` apply) and op-for-op the
+    same per-lane computation as :func:`wcc`, and the same ``combine_key``
+    as BFS/SSSP — so WCC lanes fuse into the same lane table.
+    """
+
+    def pre(vals: np.ndarray, out_deg: np.ndarray) -> np.ndarray:
+        return vals
+
+    def apply(acc, old, meta, v0=0, sources=None):
+        return np.minimum(acc, old).astype(old.dtype)
+
+    def init_lane(meta: GraphMeta, source: int):
+        vals = np.arange(meta.num_vertices, dtype=np.float32)
+        return vals, np.ones(meta.num_vertices, dtype=bool)
+
+    return LaneProgram("wcc", "min", ("wcc",), pre, apply, init_lane)
+
+
 def lane_ppr(damping: float = 0.85) -> LaneProgram:
     """Lane-vectorized personalized PageRank: each lane's teleport mass
     returns to that lane's source.  Op-for-op identical per lane to
@@ -277,6 +317,7 @@ def lane_ppr(damping: float = 0.85) -> LaneProgram:
 LANE_PROGRAMS: Dict[str, Callable[..., LaneProgram]] = {
     "bfs": lane_bfs,
     "sssp": lane_sssp,
+    "wcc": lane_wcc,
     "ppr": lane_ppr,
 }
 

@@ -31,7 +31,8 @@ import zlib
 from collections import OrderedDict
 from typing import Callable, Dict, Optional
 
-__all__ = ["CacheMode", "CacheStats", "ShardCache", "MODES"]
+__all__ = ["CacheMode", "CacheStats", "ShardCache", "MODES",
+           "mode_iteration_cost", "select_cache_mode"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +72,11 @@ class CacheStats:
         return self.inserted_bytes_raw / self.inserted_bytes_stored
 
     def reset_counters(self) -> None:
-        self.hits = self.misses = 0
+        """Zero every running counter (hit/miss, evictions, codec timers) —
+        capacity-state fields (`inserted_bytes_*`) describe what is IN the
+        cache and are deliberately kept."""
+        self.hits = self.misses = self.evictions = 0
+        self.compress_time_s = self.decompress_time_s = 0.0
 
 
 class ShardCache:
@@ -163,19 +168,52 @@ class ShardCache:
             self._bytes = 0
 
 
+def mode_iteration_cost(
+    ratio: float,
+    comp_s_per_byte: float,
+    dec_s_per_byte: float,
+    capacity_bytes: int,
+    total_raw_bytes: int,
+    *,
+    disk_bw: float = 150e6,
+    lifetime_iters: int = 10,
+) -> float:
+    """Estimated per-iteration cost of caching under one compression mode.
+
+    Three terms: (1) disk time for the bytes that still miss, (2)
+    decompression of the cached fraction on every iteration, (3) the
+    ONE-TIME compression of the cached fraction, amortized over the
+    cache's expected lifetime of ``lifetime_iters`` iterations — entries
+    are compressed once at insert and then hit repeatedly, so charging the
+    full compression time per iteration would overstate it by the
+    lifetime, and dropping it (the pre-fix behavior) understates slow
+    codecs whose compression cost is real.
+    """
+    stored_total = total_raw_bytes / max(ratio, 1e-12)
+    cached_frac = min(1.0, capacity_bytes / max(stored_total, 1))
+    miss_bytes = (1.0 - cached_frac) * total_raw_bytes
+    cached_raw = cached_frac * total_raw_bytes
+    return (
+        miss_bytes / disk_bw
+        + cached_raw * dec_s_per_byte
+        + cached_raw * comp_s_per_byte / max(lifetime_iters, 1)
+    )
+
+
 def select_cache_mode(
     sample_raw: bytes,
     capacity_bytes: int,
     total_raw_bytes: int,
     *,
     disk_bw: float = 150e6,
+    lifetime_iters: int = 10,
 ) -> int:
     """Pick the cheapest mode, GraphH-style (paper §II-D-2 pointer).
 
-    Estimates per-iteration cost = miss_bytes/disk_bw + decompress_time for
-    each mode on a sample shard, choosing the mode that minimises it.  If
-    mode-1 already fits everything, compression is pure overhead and mode-1
-    wins by construction.
+    Measures compression ratio and codec times on a sample shard, then
+    chooses the mode minimising :func:`mode_iteration_cost`.  If mode-1
+    already fits everything, compression is pure overhead and mode-1 wins
+    by construction.
     """
     best_mode, best_cost = 1, float("inf")
     for mid, mode in MODES.items():
@@ -183,15 +221,15 @@ def select_cache_mode(
         blob = mode.compress(sample_raw)
         t_comp = time.perf_counter() - t0
         ratio = len(sample_raw) / max(len(blob), 1)
-        stored_total = total_raw_bytes / ratio
-        cached_frac = min(1.0, capacity_bytes / max(stored_total, 1))
-        miss_bytes = (1.0 - cached_frac) * total_raw_bytes
         t0 = time.perf_counter()
         mode.decompress(blob)
         t_dec = time.perf_counter() - t0
-        dec_per_byte = t_dec / max(len(sample_raw), 1)
-        cost = miss_bytes / disk_bw + cached_frac * total_raw_bytes * dec_per_byte
-        del t_comp
+        per_byte = 1.0 / max(len(sample_raw), 1)
+        cost = mode_iteration_cost(
+            ratio, t_comp * per_byte, t_dec * per_byte,
+            capacity_bytes, total_raw_bytes,
+            disk_bw=disk_bw, lifetime_iters=lifetime_iters,
+        )
         if cost < best_cost:
             best_mode, best_cost = mid, cost
     return best_mode

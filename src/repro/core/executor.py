@@ -36,7 +36,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, Iterable, Iterator, List, Optional
+from typing import (
+    Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
@@ -60,6 +62,8 @@ __all__ = [
     "update_shard_numpy_lanes",
     "update_shard_jnp_lanes",
     "update_shards_jnp_lanes_batched",
+    "update_shards_jnp_lanes_multi",
+    "GroupDispatch",
 ]
 
 
@@ -161,14 +165,22 @@ def _padded_shard_inputs(ell: EllShard, msgs: np.ndarray):
     return n_ell_pad, idx, mask, seg, tw, np.pad(msgs, pad)
 
 
-def _padded_batch_inputs(ells: List[EllShard], msgs: np.ndarray):
-    """Batch-level counterpart of :func:`_padded_shard_inputs`."""
+def _staged_batch(ells: List[EllShard]):
+    """Concatenate + shape-bucket a shard batch (the shard-side staging
+    every batched lane path shares — single-group and multi-group dispatch
+    MUST pad identically or fusion stops being bitwise-invisible)."""
     batch = concat_ells(ells)
     n_ell_pad = bucket_rows(batch.n_ell, batch.tr)
     idx, mask, seg, tw = pad_ell_arrays(
         batch.ell_idx, batch.ell_mask, batch.seg, batch.tile_window,
         batch.n_ell, batch.tr, n_ell_pad,
     )
+    return batch, n_ell_pad, idx, mask, seg, tw
+
+
+def _padded_batch_inputs(ells: List[EllShard], msgs: np.ndarray):
+    """Batch-level counterpart of :func:`_padded_shard_inputs`."""
+    batch, n_ell_pad, idx, mask, seg, tw = _staged_batch(ells)
     n_pad_v = batch.num_windows * batch.window
     pad = [(0, 0)] * (msgs.ndim - 1) + [(0, n_pad_v - msgs.shape[-1])]
     return batch, n_ell_pad, idx, mask, seg, tw, np.pad(msgs, pad)
@@ -282,6 +294,41 @@ def update_shards_jnp_lanes_batched(
     return batch.split(np.asarray(acc))
 
 
+def update_shards_jnp_lanes_multi(
+    ells: List[EllShard],
+    msgs_by_group: Sequence[np.ndarray],
+    combines: Sequence[str],
+) -> List[List[np.ndarray]]:
+    """Multi-GROUP lane dispatch (fused sweeps, DESIGN.md §9): N shards are
+    concatenated / shape-bucketed / staged ONCE, then dispatched once per
+    program group against that group's own ``[K_g, |V|]`` lane matrix and
+    combine monoid — G dispatches share one decode+concat.  Each group's
+    dispatch is the exact computation
+    :func:`update_shards_jnp_lanes_batched` would run for it alone (same
+    padded arrays, same jit'd function), so fusion stays bitwise-invisible
+    per lane.  Returns one per-shard accumulator list per group.
+    """
+    import jax.numpy as jnp
+
+    if not ells:
+        return [[] for _ in msgs_by_group]
+    batch, n_ell_pad, idx, mask, seg, tw = _staged_batch(ells)
+    idx_j, mask_j, seg_j, tw_j = (
+        jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg), jnp.asarray(tw)
+    )
+    rows_pad = next_pow2(batch.rows_total)
+    n_pad_v = batch.num_windows * batch.window
+    out: List[List[np.ndarray]] = []
+    for msgs, combine in zip(msgs_by_group, combines):
+        msgs_p = np.zeros((msgs.shape[0], n_pad_v), msgs.dtype)
+        msgs_p[:, : msgs.shape[1]] = msgs
+        fn = _jnp_ell_lanes_fn(n_ell_pad, batch.k, batch.tr, rows_pad,
+                               batch.window, combine)
+        acc = fn(idx_j, mask_j, seg_j, tw_j, jnp.asarray(msgs_p))
+        out.append(batch.split(np.asarray(acc)))
+    return out
+
+
 def _update_shard_pallas_lanes(
     csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
 ) -> np.ndarray:
@@ -297,6 +344,20 @@ def _update_shards_pallas_lanes_batched(
 
     return [np.asarray(a)
             for a in spmv_ops.ell_update_lanes_batched(ells, msgs, combine)]
+
+
+def _update_shards_pallas_lanes_multi(
+    ells: List[EllShard],
+    msgs_by_group: Sequence[np.ndarray],
+    combines: Sequence[str],
+) -> List[List[np.ndarray]]:
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return [
+        [np.asarray(a) for a in accs]
+        for accs in spmv_ops.ell_update_lanes_multi(ells, msgs_by_group,
+                                                    combines)
+    ]
 
 
 BACKENDS: Dict[str, Callable] = {
@@ -320,6 +381,17 @@ _BATCHED_LANE_BACKENDS: Dict[str, Callable] = {
     "jnp": update_shards_jnp_lanes_batched,
     "pallas": _update_shards_pallas_lanes_batched,
 }
+
+_MULTI_LANE_BACKENDS: Dict[str, Callable] = {
+    "jnp": update_shards_jnp_lanes_multi,
+    "pallas": _update_shards_pallas_lanes_multi,
+}
+
+#: One program group's dispatch request for ``run_groups``: the group's
+#: ``[K_g, |V|]`` message matrix and its combine monoid, or None when the
+#: group has nothing to dispatch for these shards (every lane masked off /
+#: already retired) — the shard stream is still consumed once.
+GroupDispatch = Optional[Tuple[np.ndarray, str]]
 
 
 # --------------------------------------------------------------------------
@@ -384,6 +456,32 @@ class PerShardExecutor:
             ref = ls.ref
             yield ExecResult(ls.shard_id, ref.v0, ref.v1, np.asarray(acc))
 
+    def run_groups(
+        self,
+        loaded: Iterable[LoadedShard],
+        groups: Sequence[GroupDispatch],
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[Tuple[int, ExecResult]]:
+        """Multi-group dispatch (fused sweeps): consume each loaded shard
+        ONCE and dispatch it per live program group — one load+decode, G
+        backend calls.  Yields ``(group_index, result)``; ``None`` entries
+        in ``groups`` are skipped without a dispatch.
+        """
+        for ls in loaded:
+            ref = ls.ref
+            for gi, ga in enumerate(groups):
+                if ga is None:
+                    continue
+                msgs, combine = ga
+                t0 = time.perf_counter()
+                acc = self._fn(ls.csr, ls.ell, msgs, combine)
+                if stats is not None:
+                    stats.dispatches += 1
+                    stats.shards_executed += 1
+                    stats.exec_s += time.perf_counter() - t0
+                yield gi, ExecResult(ls.shard_id, ref.v0, ref.v1,
+                                     np.asarray(acc))
+
 
 class BatchedEllExecutor:
     """Batch consecutive planned ELL shards into one kernel dispatch.
@@ -405,6 +503,7 @@ class BatchedEllExecutor:
         self.batch_shards = batch_shards
         self.lanes = lanes
         self._fn = table[backend]
+        self._multi_fn = _MULTI_LANE_BACKENDS[backend] if lanes else None
 
     def run(
         self,
@@ -434,6 +533,49 @@ class BatchedEllExecutor:
                 ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc),
                 batch_size=len(buf),
             )
+
+    def run_groups(
+        self,
+        loaded: Iterable[LoadedShard],
+        groups: Sequence[GroupDispatch],
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[Tuple[int, ExecResult]]:
+        """Multi-group batched dispatch: up to ``batch_shards`` consecutive
+        shards are concatenated ONCE (shared decode + concat + pad staging)
+        and dispatched once per live program group — the fused serving hot
+        loop's cost shape: 1 load, 1 concat, G kernel launches per batch.
+        """
+        if not self.lanes:
+            raise RuntimeError("run_groups needs a lane executor")
+        buf: List[LoadedShard] = []
+        for ls in loaded:
+            buf.append(ls)
+            if len(buf) >= self.batch_shards:
+                yield from self._flush_groups(buf, groups, stats)
+                buf = []
+        if buf:
+            yield from self._flush_groups(buf, groups, stats)
+
+    def _flush_groups(self, buf, groups, stats):
+        live = [(gi, ga) for gi, ga in enumerate(groups) if ga is not None]
+        if not live:
+            return
+        t0 = time.perf_counter()
+        accs_by_group = self._multi_fn(
+            [ls.ell for ls in buf],
+            [ga[0] for _, ga in live],
+            [ga[1] for _, ga in live],
+        )
+        if stats is not None:
+            stats.dispatches += len(live)
+            stats.shards_executed += len(buf) * len(live)
+            stats.exec_s += time.perf_counter() - t0
+        for (gi, _), accs in zip(live, accs_by_group):
+            for ls, acc in zip(buf, accs):
+                yield gi, ExecResult(
+                    ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc),
+                    batch_size=len(buf),
+                )
 
 
 def make_executor(backend: str, *, batch_shards: int = 1):

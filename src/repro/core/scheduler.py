@@ -47,6 +47,11 @@ class ShardPlan:
     skipping is correct, applied per lane (DESIGN.md §6).  ``None`` means
     every lane needs every planned shard (single-query plans, selective
     off, or lane masking disabled).
+
+    For a FUSED sweep (DESIGN.md §9) the lane axis is the concatenation of
+    every live lane across all program groups, in group order — the caller
+    slices each shard's mask back per group; the plan itself is
+    group-agnostic (one union active set, one mask row per live lane).
     """
 
     shards: List[int]
@@ -63,6 +68,30 @@ class ShardPlan:
     @property
     def num_skipped(self) -> int:
         return len(self.skipped)
+
+    def lane_shares(self, n_lanes: int) -> np.ndarray:
+        """Mask-aware per-lane share of this plan's shard loads.
+
+        Each planned shard's single load is split across ONLY the lanes it
+        was dispatched for: with lane masks, lane ``l`` earns ``1/|mask_p|``
+        for every planned shard ``p`` whose mask includes it; without
+        masks, every lane dispatches every shard and earns
+        ``num_planned / n_lanes``.  Either way the shares sum to
+        ``num_planned`` (one unit per load), so attribution built on top of
+        them is conserved — the serving layer multiplies by bytes-per-load
+        to split an iteration's read volume (ROADMAP "mask-aware cost
+        attribution" follow-on, closed in DESIGN.md §9).
+        """
+        shares = np.zeros(n_lanes, dtype=np.float64)
+        if n_lanes == 0:
+            return shares
+        if self.lane_masks is None:
+            shares[:] = self.num_planned / n_lanes
+            return shares
+        for p in self.shards:
+            mask = self.lane_masks[p]
+            shares[mask] += 1.0 / int(mask.sum())
+        return shares
 
 
 class ShardScheduler:
@@ -172,8 +201,11 @@ class ShardScheduler:
     ) -> ShardPlan:
         """Emit this iteration's ordered shard plan.
 
-        ``active_ids`` is the (union) active vertex set.  ``lane_active``
-        optionally carries the per-lane active sets of a lane sweep; when
+        ``active_ids`` is the (union) active vertex set — for a fused
+        multi-group sweep, the union across every live lane of every
+        program group.  ``lane_active``
+        optionally carries the per-lane active sets of a lane sweep
+        (concatenated across groups in group order for fused sweeps); when
         selective scheduling engages, the plan then also computes a
         per-shard LANE MASK so the sweep can skip dispatch rows for lanes
         with no active source in the shard (ROADMAP "lane-aware selective

@@ -230,6 +230,52 @@ def ell_update_lanes_batched(
     return batch.split(np.asarray(acc))
 
 
+def ell_update_lanes_multi(
+    ells: Sequence[EllShard],
+    msgs_by_group: Sequence[np.ndarray],  # each [K_g, |V|]
+    combines: Sequence[str],
+    *,
+    interpret: bool = True,
+) -> List[List[np.ndarray]]:
+    """Per-shard ``[K_g, rows]`` accumulators for N shards x G program
+    groups: the batch is concatenated, shape-bucketed and staged to device
+    ONCE, then dispatched once per group against that group's own lane
+    matrix and combine monoid (DESIGN.md §9 — fused sweeps interleave
+    heterogeneous query programs on one decoded shard stream).
+
+    Each group's dispatch calls the exact jit'd computation
+    :func:`ell_update_lanes_batched` would run for it alone — same padded
+    arrays, same shape buckets — so interleaving is bitwise-invisible per
+    lane.  Returns one per-shard accumulator list per group.
+    """
+    if len(msgs_by_group) != len(combines):
+        raise ValueError("one combine per message group")
+    for msgs in msgs_by_group:
+        if msgs.ndim != 2:
+            raise ValueError(
+                f"lane update needs [lanes, |V|] messages, got {msgs.shape}"
+            )
+    if not ells:
+        return [[] for _ in msgs_by_group]
+    batch, idx, mask, seg, tw = _prep_batch(ells)
+    idx_j, mask_j, seg_j, tw_j = (
+        jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg), jnp.asarray(tw)
+    )
+    rows_pad = next_pow2(batch.rows_total)
+    n_pad_v = batch.num_windows * batch.window
+    out: List[List[np.ndarray]] = []
+    for msgs, combine in zip(msgs_by_group, combines):
+        msgs_p = np.zeros((msgs.shape[0], n_pad_v), msgs.dtype)
+        msgs_p[:, : msgs.shape[1]] = msgs
+        acc = _update_lanes_jit(
+            idx_j, mask_j, seg_j, tw_j, jnp.asarray(msgs_p),
+            window=batch.window, tr=batch.tr, rows=rows_pad,
+            combine=combine, interpret=interpret,
+        )
+        out.append(batch.split(np.asarray(acc)))
+    return out
+
+
 def ell_update_arrays(
     idx_global: jax.Array,  # [n_ell, K] int32 global source ids
     valid: jax.Array,

@@ -9,17 +9,25 @@ query drops from ``θ·D·|E|`` to ``≈ θ·D·|E| / K`` (DESIGN.md §6).
 
 Layers (bottom-up):
 
+Heterogeneous programs share streams two ways (DESIGN.md §9): same-algebra
+programs (BFS/SSSP/WCC, or PPR at any damping) FUSE into one lane table,
+and different algebra groups INTERLEAVE on one sweep — each loaded shard
+is dispatched once per live group.
+
 ==========  ===============================================================
-sweep       :class:`~repro.serve.sweep.LaneSweep` — drives the engine's
-            scheduler/pipeline with lane-dimensional executors; lanes
-            retire on convergence and are backfilled mid-flight.
-batcher     :class:`~repro.serve.batcher.LaneBatcher` — groups compatible
-            requests (same vertex program + static params) into lane
-            batches, padded to pow2 lane counts to bound recompiles.
+sweep       :class:`~repro.serve.sweep.FusedSweep` — drives the engine's
+            scheduler/pipeline for G program groups on one pinned shard
+            stream; each group is a :class:`~repro.serve.sweep.LaneTable`
+            (slot state, admission, retirement, per-group backfill).
+            :class:`~repro.serve.sweep.LaneSweep` is the single-program
+            wrapper.
+batcher     :class:`~repro.serve.batcher.LaneBatcher` — forms fusion sets:
+            groups requests by combine algebra (then by group budget),
+            padded to pow2 lane counts to bound recompiles.
 session     :class:`~repro.serve.session.SessionCache` — LRU result cache
             keyed by (program, source, graph-version).
 service     :class:`~repro.serve.service.GraphService` — request queue,
-            admission by lane budget, worker thread, per-request
+            admission by lane budget, worker thread, mask-aware per-request
             latency / I/O attribution.
 ==========  ===============================================================
 """
@@ -27,7 +35,14 @@ service     :class:`~repro.serve.service.GraphService` — request queue,
 from .batcher import LaneBatcher, pad_lanes
 from .service import GraphService, QueryResult, ServiceOverloaded, UpdateResult
 from .session import SessionCache
-from .sweep import LaneResult, LaneSeed, LaneSweep, SweepIterStats
+from .sweep import (
+    FusedSweep,
+    LaneResult,
+    LaneSeed,
+    LaneSweep,
+    LaneTable,
+    SweepIterStats,
+)
 
 __all__ = [
     "GraphService",
@@ -37,6 +52,8 @@ __all__ = [
     "LaneBatcher",
     "pad_lanes",
     "SessionCache",
+    "FusedSweep",
+    "LaneTable",
     "LaneSweep",
     "LaneSeed",
     "LaneResult",

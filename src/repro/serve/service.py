@@ -3,22 +3,27 @@
 One resident :class:`~repro.core.vsw.VSWEngine` (Bloom filters built once,
 cache warm, prefetch pool up) answers a stream of per-source queries.
 Callers ``submit()`` from any thread and get a ``Future``; a single serve
-worker groups compatible requests into lane batches
-(:class:`~repro.serve.batcher.LaneBatcher`), runs them as one lane-batched
-VSW sweep (:class:`~repro.serve.sweep.LaneSweep`), and resolves each future
-the moment its lane retires — queries admitted together share every shard
+worker forms *fusion sets* from the pending queue
+(:class:`~repro.serve.batcher.LaneBatcher`): requests sharing a combine
+algebra — BFS, SSSP and WCC together, PPR at any damping together — fuse
+into one lane table, and up to ``max_groups`` algebra groups interleave
+on ONE shard stream (:class:`~repro.serve.sweep.FusedSweep`: each shard
+loads once and dispatches once per group).  Each future resolves the
+moment its lane retires — queries admitted together share every shard
 load, and lanes freed by early convergence are backfilled from the queue
-mid-sweep.
+mid-sweep, per group.
 
-Admission control is the lane budget: at most ``max_lanes`` queries ride
-one sweep, and (optionally) at most ``max_pending`` may queue —
-:class:`ServiceOverloaded` is the back-pressure signal.  Finished results
-land in a :class:`~repro.serve.session.SessionCache` keyed by
+Admission control is the lane budget: at most ``max_lanes`` queries per
+group and ``max_groups`` groups ride one sweep, and (optionally) at most
+``max_pending`` may queue — :class:`ServiceOverloaded` is the
+back-pressure signal.  Finished results land in a
+:class:`~repro.serve.session.SessionCache` keyed by
 (program, source, graph-version), so repeat queries bypass the queue.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import threading
@@ -35,7 +40,7 @@ from repro.core.vsw import VSWEngine
 
 from .batcher import LaneBatcher
 from .session import SessionCache
-from .sweep import LaneResult, LaneSeed, LaneSweep
+from .sweep import FusedSweep, LaneResult, LaneSeed
 
 __all__ = ["GraphService", "QueryResult", "ServiceOverloaded"]
 
@@ -55,10 +60,14 @@ class QueryResult:
     iterations: int
     converged: bool
     latency_s: float  # submit -> future resolution
+    # Mask-aware cost shares: each planned shard's load (and the bytes
+    # behind it) is split over only the lanes it was dispatched for, so a
+    # query masked out of most of the stream is billed accordingly.
     bytes_read: float  # this query's share of sweep disk bytes
     shard_loads: float  # this query's share of shard fetches
-    lanes: int  # lane capacity of the sweep that served it
+    lanes: int  # lane capacity of the fusion GROUP that served it
     cached: bool = False  # served from the session cache
+    groups: int = 1  # program groups interleaved on the serving sweep
     # The graph version this result was computed at.  Every sweep runs
     # pinned to ONE version (updates publish strictly between sweeps), so
     # a result is never a mix of two edge states — tests assert values
@@ -110,9 +119,14 @@ class _Pending:
     def key(self) -> Tuple:
         return self.prog.key
 
+    @property
+    def combine_key(self) -> Tuple:
+        return self.prog.combine_key
+
 
 class GraphService:
-    """Serve concurrent BFS / SSSP / PPR queries from one warm engine."""
+    """Serve concurrent BFS / SSSP / WCC / PPR queries from one warm
+    engine, fusing and interleaving them onto shared shard streams."""
 
     def __init__(
         self,
@@ -126,9 +140,14 @@ class GraphService:
         graph_version: int = 0,
         lane_selective: bool = True,
         auto_compact_runs: Optional[int] = None,
+        max_groups: int = 2,
+        fuse_programs: bool = True,
     ):
         self.engine = engine
-        self.batcher = LaneBatcher(max_lanes, pad_pow2=pad_pow2)
+        self.batcher = LaneBatcher(
+            max_lanes, pad_pow2=pad_pow2, max_groups=max_groups,
+            fuse_programs=fuse_programs,
+        )
         self.sessions = SessionCache(session_entries)
         self.batch_shards = batch_shards
         self.max_pending = max_pending
@@ -145,6 +164,7 @@ class GraphService:
         # aggregate counters (worker-thread writes, snapshot under the lock)
         self._queries_done = 0
         self._sweeps = 0
+        self._multi_group_sweeps = 0
         self._updates_done = 0
         self._bytes_read = 0.0
         self._shard_loads = 0.0
@@ -180,6 +200,8 @@ class GraphService:
         "graph_version",
         "lane_selective",
         "auto_compact_runs",
+        "max_groups",
+        "fuse_programs",
     )
 
     @classmethod
@@ -289,6 +311,18 @@ class GraphService:
             program, source, max_iters=max_iters, **params
         ).result()
 
+    @contextlib.contextmanager
+    def submit_batch(self):
+        """Admit several queries atomically: while the block is open the
+        serve worker cannot pop the queue, so everything submitted inside
+        is eligible for ONE fusion set (maximal fusion/interleaving
+        instead of whatever prefix the worker races to).  Do not block on
+        ``Future.result()`` inside the block — the worker cannot run
+        until it closes.
+        """
+        with self._cond:
+            yield self
+
     # ------------------------------------------------------------- updates
     def apply_updates(
         self, inserts=None, deletes=None
@@ -365,32 +399,41 @@ class GraphService:
                     return
                 updates: List[_PendingUpdate] = list(self._updates)
                 self._updates.clear()
-                batch = self.batcher.form(self._pending) if self._pending else []
+                groups = (
+                    self.batcher.form_fused(self._pending)
+                    if self._pending else []
+                )
             if updates:
-                # publish BEFORE the next sweep: the batch just formed (and
-                # everything after it) runs on the new version; in-flight
-                # work already finished — sweeps and publishes share this
-                # worker thread, so they can never interleave.
+                # publish BEFORE the next sweep: the fusion set just formed
+                # (and everything after it) runs on the new version; in-
+                # flight work already finished — sweeps and publishes share
+                # this worker thread, so they can never interleave.
                 self._publish_updates(updates)
-            if batch:
-                self._run_batch(batch)
+            if groups:
+                self._run_fusion_set(groups)
 
-    def _run_batch(self, batch: List[_Pending]) -> None:
-        prog = batch[0].prog
-        key = batch[0].key
-        capacity = self.batcher.capacity(len(batch))
+    def _run_fusion_set(self, groups: List[List[_Pending]]) -> None:
+        """Run one fusion set — up to ``max_groups`` algebra groups on one
+        shared shard stream — resolving each future as its lane retires."""
+        capacities = [self.batcher.capacity(len(g)) for g in groups]
+        group_keys = [self.batcher.group_key(g[0]) for g in groups]
+        n_groups = len(groups)
         resolved: set = set()
-        admitted: List[_Pending] = list(batch)  # incl. mid-sweep backfills
+        admitted: List[_Pending] = [p for g in groups for p in g]
+
         # The whole sweep — including lanes backfilled mid-flight — runs at
         # this version: publishes only happen on this thread between sweeps.
         version = self.graph_version
 
-        def backfill(n_free: int) -> List[LaneSeed]:
+        def backfill(group: int, n_free: int) -> List[LaneSeed]:
             with self._cond:
-                taken = self.batcher.take_compatible(self._pending, key, n_free)
+                taken = self.batcher.take_fusable(
+                    self._pending, group_keys[group], n_free
+                )
             admitted.extend(taken)
             return [
-                LaneSeed(source=p.source, max_iters=p.max_iters, token=p)
+                LaneSeed(source=p.source, max_iters=p.max_iters, token=p,
+                         program=p.prog)
                 for p in taken
             ]
 
@@ -406,8 +449,9 @@ class GraphService:
                 latency_s=time.perf_counter() - p.t_submit,
                 bytes_read=res.bytes_read,
                 shard_loads=res.shard_loads,
-                lanes=capacity,
+                lanes=capacities[res.group],
                 graph_version=version,
+                groups=n_groups,
             )
             # Cache a private copy: the caller owns ``qr.values`` and may
             # mutate it; later hits must still see the computed result.
@@ -422,19 +466,22 @@ class GraphService:
                 self._shard_loads += res.shard_loads
             p.future.set_result(qr)
 
-        seeds = [
-            LaneSeed(source=p.source, max_iters=p.max_iters, token=p)
-            for p in batch
+        seed_groups = [
+            [
+                LaneSeed(source=p.source, max_iters=p.max_iters, token=p,
+                         program=p.prog)
+                for p in g
+            ]
+            for g in groups
         ]
-        sweep = LaneSweep(
+        sweep = FusedSweep(
             self.engine,
-            prog,
             batch_shards=self.batch_shards,
             pad_pow2=self.batcher.pad_pow2,
             lane_selective=self.lane_selective,
         )
         try:
-            sweep.run(seeds, backfill=backfill, on_retire=on_retire)
+            sweep.run(seed_groups, backfill=backfill, on_retire=on_retire)
         except BaseException as exc:  # propagate to every unresolved caller
             for p in admitted:
                 if p.request_id not in resolved and not p.future.done():
@@ -442,6 +489,8 @@ class GraphService:
         finally:
             with self._cond:
                 self._sweeps += 1
+                if n_groups > 1:
+                    self._multi_group_sweeps += 1
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
@@ -451,6 +500,7 @@ class GraphService:
             out = {
                 "queries_completed": done,
                 "sweeps": self._sweeps,
+                "multi_group_sweeps": self._multi_group_sweeps,
                 "pending": len(self._pending),
                 "bytes_read_total": self._bytes_read,
                 "shard_loads_total": self._shard_loads,

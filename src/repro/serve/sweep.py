@@ -1,32 +1,49 @@
-"""Lane-batched VSW sweeps: K concurrent queries over one shard stream.
+"""Fused lane sweeps: heterogeneous query programs on ONE shard stream.
 
-A :class:`LaneSweep` reuses a warm :class:`~repro.core.vsw.VSWEngine`'s
-scheduler, pipeline and store, but replaces the single vertex-value array
-with a ``(capacity, n)`` lane matrix — one row per in-flight query — and
-dispatches each loaded shard through a lane executor
-(:func:`repro.core.executor.make_lane_executor`) so every shard load is
-amortized across all live lanes.
+GraphMP's whole advantage is that every byte of edge I/O is amortized over
+as much compute as possible.  This module pushes that across *programs*:
+a :class:`FusedSweep` reuses a warm :class:`~repro.core.vsw.VSWEngine`'s
+scheduler, pipeline and store to drive G concurrent **program groups**,
+each a :class:`LaneTable` — a ``(capacity, n)`` lane matrix whose lanes
+share one combine algebra (:attr:`~repro.core.apps.LaneProgram.combine_key`)
+but may run *different programs* (BFS, SSSP and WCC fuse into one table;
+``pre``/``apply``/``is_active`` are applied per lane, grouped by full
+program key).  Every loaded+decoded shard is dispatched once per live
+group (:meth:`run_groups` on the lane executors): G small dispatches, one
+load.
 
-Scheduling uses the UNION of the per-lane active sets: a shard is skipped
-only when *no* lane's Bloom filter matches.  This preserves per-lane
-results bitwise (DESIGN.md §6): the union plan is a superset of each lane's
-own plan (``any_member`` over a superset of ids can only add shards, and
-above-threshold lanes force the full plan), and recomputing a shard whose
-in-messages did not change reproduces the carried-over value exactly — for
-monotone ``min`` programs because ``min(acc, old) == old``, and for the
-``sum`` programs because ``apply`` is a deterministic function of an
-unchanged ``acc``.
+Scheduling uses the UNION of the per-lane active sets across every group:
+a shard is skipped only when *no* lane's Bloom filter matches.  This
+preserves per-lane results bitwise (DESIGN.md §6/§9): the union plan is a
+superset of each lane's own plan (``any_member`` over a superset of ids
+can only add shards, and above-threshold lanes force the full plan), and
+recomputing a shard whose in-messages did not change reproduces the
+carried-over value exactly — for monotone ``min`` programs because
+``min(acc, old) == old``, and for the ``sum`` programs because ``apply``
+is a deterministic function of an unchanged ``acc``.  Fusion adds nothing
+to prove: each lane's messages are computed by its own program's ``pre``
+on its own row, the kernel is vmapped per lane, and ``apply`` runs per
+lane — the per-lane computation is op-for-op the solo run's.
 
 Lanes retire as soon as their own active set empties (or their iteration
 budget runs out) and the freed slot is immediately backfilled from the
-service queue, keeping the lane matrix full under load.
+service queue — per group, so a drained PPR table keeps admitting PPR
+queries while a min-algebra table still sweeps.
+
+I/O cost is attributed mask-aware (:meth:`ShardPlan.lane_shares`): each
+shard's load is split over only the lanes it was actually dispatched for,
+and an iteration's bytes follow the same shares — summed over lanes they
+reproduce the sweep totals exactly.
+
+:class:`LaneSweep` (PR 2's single-program API) remains as a thin wrapper:
+one program, one group.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,16 +55,20 @@ from repro.core.vsw import VSWEngine
 
 from .batcher import pad_lanes
 
-__all__ = ["LaneSeed", "LaneResult", "SweepIterStats", "LaneSweep"]
+__all__ = ["LaneSeed", "LaneResult", "SweepIterStats", "LaneTable",
+           "FusedSweep", "LaneSweep"]
 
 
 @dataclasses.dataclass
 class LaneSeed:
-    """One admitted query: where it starts and how long it may run."""
+    """One admitted query: where it starts, how long it may run, and (for
+    fused sweeps) which lane program it runs.  ``program=None`` is only
+    valid through :class:`LaneSweep`, which fills in its single program."""
 
     source: int
     max_iters: int = 100
     token: Any = None  # opaque caller payload (the service's pending entry)
+    program: Optional[LaneProgram] = None
 
 
 @dataclasses.dataclass
@@ -55,8 +76,10 @@ class LaneResult:
     """One retired lane: final values plus attributed cost.
 
     ``bytes_read`` / ``shard_loads`` are the lane's *share* of the sweep's
-    I/O: each iteration's cost is split evenly over the lanes live in it —
-    the amortization the serving layer exists to create.
+    I/O, split mask-aware: each planned shard's load (and the bytes behind
+    it) is divided over only the lanes that shard was dispatched for —
+    the amortization the serving layer exists to create, now attributed to
+    the lanes that actually consumed it.
     """
 
     token: Any
@@ -66,6 +89,8 @@ class LaneResult:
     converged: bool
     bytes_read: float
     shard_loads: float
+    group: int = 0  # fusion-group index within the sweep
+    program: str = ""
 
 
 @dataclasses.dataclass
@@ -82,10 +107,440 @@ class SweepIterStats:
     # lane-aware selective scheduling: dispatch rows (shard x lane pairs)
     # skipped because the lane had no active source in the shard
     lane_rows_skipped: int = 0
+    # fusion: program groups live this iteration (1 for plain lane sweeps)
+    groups: int = 1
+
+
+class LaneTable:
+    """Slot state for ONE fusion group: lanes sharing a combine algebra.
+
+    The table owns everything per-slot — values, active masks, the lane's
+    :class:`LaneProgram`, its seed, iteration/cost counters — and the
+    admission / retirement lifecycle.  Programs may differ across slots as
+    long as every lane's ``combine`` matches the table's (that is what a
+    fusion group *is*); row-wise stages (``pre`` / ``apply`` /
+    ``is_active``) run per program-key run of slots, so each lane's
+    computation is exactly its solo program's.
+    """
+
+    def __init__(self, meta, combine: str, capacity: int, *, group: int = 0):
+        self.meta = meta
+        self.combine = combine
+        self.capacity = capacity
+        self.group = group
+        n = meta.num_vertices
+        self.vals = np.zeros((capacity, n), dtype=np.float32)
+        self.active = np.zeros((capacity, n), dtype=bool)
+        self.live = np.zeros(capacity, dtype=bool)
+        self.sources = np.full(capacity, -1, dtype=np.int64)
+        self.lane_iters = np.zeros(capacity, dtype=np.int64)
+        self.lane_bytes = np.zeros(capacity, dtype=np.float64)
+        self.lane_loads = np.zeros(capacity, dtype=np.float64)
+        self.progs: List[Optional[LaneProgram]] = [None] * capacity
+        self.seeds: List[Optional[LaneSeed]] = [None] * capacity
+
+    # ---------------------------------------------------------- admission
+    def admit(self, seed: LaneSeed) -> Optional[LaneResult]:
+        """THE admission path — initial seeds and mid-sweep backfill alike.
+
+        Handles ``max_iters <= 0`` here, once (parity with
+        ``VSWEngine.run``): zero iterations, init values, not converged —
+        the seed never takes a slot and its finished :class:`LaneResult`
+        is returned.  Otherwise the seed occupies a free slot and ``None``
+        is returned.
+        """
+        prog = seed.program
+        if prog is None:
+            raise ValueError("LaneSeed.program is required (fused sweeps)")
+        if prog.combine != self.combine:
+            raise ValueError(
+                f"program {prog.name!r} ({prog.combine}) cannot join a "
+                f"{self.combine!r} lane table"
+            )
+        if seed.max_iters <= 0:
+            v, _ = prog.init_lane(self.meta, seed.source)
+            return LaneResult(
+                token=seed.token, source=seed.source,
+                values=v.astype(np.float32), iterations=0, converged=False,
+                bytes_read=0.0, shard_loads=0.0,
+                group=self.group, program=prog.name,
+            )
+        free = np.flatnonzero(~self.live)
+        if not len(free):
+            raise RuntimeError("lane table is full")
+        slot = int(free[0])
+        v, a = prog.init_lane(self.meta, seed.source)
+        self.vals[slot] = v
+        self.active[slot] = a
+        self.live[slot] = True
+        self.sources[slot] = seed.source
+        self.lane_iters[slot] = 0
+        self.lane_bytes[slot] = 0.0
+        self.lane_loads[slot] = 0.0
+        self.progs[slot] = prog
+        self.seeds[slot] = seed
+        return None
+
+    def live_slots(self) -> np.ndarray:
+        return np.flatnonzero(self.live)
+
+    def free_count(self) -> int:
+        return int((~self.live).sum())
+
+    # ------------------------------------------------- per-program stages
+    def _prog_runs(
+        self, slots: np.ndarray
+    ) -> Iterator[Tuple[np.ndarray, LaneProgram]]:
+        """Partition ``slots`` into runs sharing a full program key —
+        equal-key lanes run the identical computation, so each run is one
+        vectorized call."""
+        runs: Dict[Tuple, Tuple[List[int], LaneProgram]] = {}
+        for i, k in enumerate(slots):
+            prog = self.progs[int(k)]
+            runs.setdefault(prog.key, ([], prog))[0].append(i)
+        for rows, prog in runs.values():
+            yield np.asarray(rows, dtype=np.int64), prog
+
+    def messages(self, out_deg: np.ndarray) -> np.ndarray:
+        """Per-lane ``pre`` over the live slots (each lane's own program);
+        dead/free rows stay zero — they are never applied."""
+        msgs = np.zeros_like(self.vals)
+        slots = self.live_slots()
+        for rows, prog in self._prog_runs(slots):
+            sl = slots[rows]
+            msgs[sl] = prog.pre(self.vals[sl], out_deg).astype(np.float32)
+        return msgs
+
+    def apply_rows(
+        self,
+        acc: np.ndarray,
+        slots: np.ndarray,
+        v0: int,
+        v1: int,
+        dst: np.ndarray,
+    ) -> None:
+        """Per-lane ``apply`` for one shard interval: row ``i`` of ``acc``
+        belongs to slot ``slots[i]``; results land in ``dst``."""
+        for rows, prog in self._prog_runs(slots):
+            sl = slots[rows]
+            new = prog.apply(
+                acc[rows], self.vals[sl, v0:v1], self.meta, v0,
+                self.sources[sl],
+            )
+            dst[sl, v0:v1] = new
+
+    def advance(self, dst: np.ndarray) -> None:
+        """Commit one iteration: per-lane ``is_active`` against the old
+        values, then swap in ``dst`` and bump live lanes' iteration
+        counters."""
+        slots = self.live_slots()
+        new_active = np.zeros_like(self.active)
+        for rows, prog in self._prog_runs(slots):
+            sl = slots[rows]
+            new_active[sl] = prog.is_active(dst[sl], self.vals[sl])
+        self.vals = dst
+        self.active = new_active
+        self.lane_iters[self.live] += 1
+
+    def attribute(self, shares: np.ndarray, bytes_per_load: float) -> None:
+        """Add this iteration's mask-aware cost shares (aligned with
+        ``live_slots()``) to the lanes' running totals."""
+        slots = self.live_slots()
+        self.lane_loads[slots] += shares
+        self.lane_bytes[slots] += shares * bytes_per_load
+
+    # --------------------------------------------------------- retirement
+    def retire(self, emit: Callable[[LaneResult], None]) -> int:
+        """Free every lane that converged or exhausted its budget; ``emit``
+        fires per retired lane (the service resolves futures here)."""
+        retired = 0
+        for k in self.live_slots():
+            k = int(k)
+            seed = self.seeds[k]
+            converged = not self.active[k].any()
+            if not converged and self.lane_iters[k] < seed.max_iters:
+                continue
+            self.live[k] = False
+            self.active[k] = False
+            retired += 1
+            emit(
+                LaneResult(
+                    token=seed.token,
+                    source=seed.source,
+                    values=self.vals[k].copy(),
+                    iterations=int(self.lane_iters[k]),
+                    converged=converged,
+                    bytes_read=float(self.lane_bytes[k]),
+                    shard_loads=float(self.lane_loads[k]),
+                    group=self.group,
+                    program=self.progs[k].name,
+                )
+            )
+            self.progs[k] = None
+            self.seeds[k] = None
+        return retired
+
+
+class FusedSweep:
+    """Drive G program groups over ONE pinned shard stream.
+
+    Each iteration plans the union active set across every group, loads
+    each planned shard once, and dispatches it per live group through the
+    lane executor's multi-group path — with per-(group, lane) masks under
+    lane-aware selective scheduling.
+    """
+
+    def __init__(
+        self,
+        engine: VSWEngine,
+        *,
+        batch_shards: int = 1,
+        pad_pow2: bool = True,
+        lane_selective: bool = True,
+    ):
+        self.engine = engine
+        self.pad_pow2 = pad_pow2
+        # Lane-aware selective scheduling: when the union plan is selective,
+        # also skip dispatch ROWS for lanes whose Bloom filter matches no
+        # active vertex of the shard — and whole GROUPS whose lanes are all
+        # masked (the shard still loads once).  Same bitwise argument as
+        # whole-shard skipping, per lane (DESIGN.md §6).
+        self.lane_selective = lane_selective
+        self.executor = make_lane_executor(
+            engine.backend_name, batch_shards=batch_shards
+        )
+        self.iter_stats: List[SweepIterStats] = []
+
+    # ------------------------------------------------------------------ run
+    def run(
+        self,
+        seed_groups: Sequence[Sequence[LaneSeed]],
+        *,
+        backfill: Optional[Callable[[int, int], Sequence[LaneSeed]]] = None,
+        on_retire: Optional[Callable[[LaneResult], None]] = None,
+    ) -> List[LaneResult]:
+        """Sweep until every group's lanes have retired and ``backfill``
+        is dry.
+
+        ``seed_groups[g]`` seeds group ``g``; every seed carries its own
+        program and all programs within a group must share a combine
+        algebra.  ``backfill(g, n_free)`` is called whenever group ``g``
+        has free slots; it may return up to ``n_free`` new seeds (same
+        combine algebra) which start their own iteration 0 mid-sweep.
+        ``on_retire`` fires the moment a lane finishes.
+        """
+        results: List[LaneResult] = []
+
+        def emit(res: LaneResult) -> None:
+            results.append(res)
+            if on_retire is not None:
+                on_retire(res)
+
+        engine = self.engine
+        meta = engine.meta
+        n = meta.num_vertices
+
+        tables: List[LaneTable] = []
+        pending_admits: List[Tuple[LaneTable, LaneSeed]] = []
+        for gi, seeds in enumerate(seed_groups):
+            seeds = list(seeds)
+            if not seeds:
+                continue
+            combine = seeds[0].program.combine
+            n_live = sum(1 for s in seeds if s.max_iters > 0)
+            capacity = pad_lanes(n_live) if self.pad_pow2 else max(n_live, 1)
+            table = LaneTable(meta, combine, capacity, group=gi)
+            tables.append(table)
+            pending_admits.extend((table, s) for s in seeds)
+        for table, seed in pending_admits:
+            res = table.admit(seed)
+            if res is not None:
+                emit(res)  # zero-budget: finished at admission
+        if not any(t.live.any() for t in tables):
+            return results
+
+        pstats = PipelineStats()
+        xstats = ExecStats()
+        it = 0
+        # One pinned delta session for the WHOLE sweep: mutations published
+        # while lanes are in flight become visible to the NEXT sweep, never
+        # mid-query — every result is computed at exactly one graph version.
+        with engine._sweep_session():
+            while any(t.live.any() for t in tables):
+                t0 = time.perf_counter()
+                io0 = engine.store.io.snapshot()
+                pstats.reset()
+                xstats.reset()
+
+                group_live = [t.live_slots() for t in tables]
+                total_live = int(sum(len(sl) for sl in group_live))
+                n_groups_live = sum(1 for sl in group_live if len(sl))
+                union_any = np.zeros(n, dtype=bool)
+                for t, sl in zip(tables, group_live):
+                    if len(sl):
+                        union_any |= t.active[sl].any(axis=0)
+                union_ids = np.flatnonzero(union_any).astype(np.int64)
+                lane_active = None
+                if self.lane_selective and total_live > 1:
+                    lane_active = [
+                        np.flatnonzero(t.active[k]).astype(np.int64)
+                        for t, sl in zip(tables, group_live)
+                        for k in sl
+                    ]
+                plan = engine.scheduler.plan(union_ids, lane_active=lane_active)
+                msgs = [
+                    t.messages(meta.out_deg) if len(sl) else None
+                    for t, sl in zip(tables, group_live)
+                ]
+                # carried over for skipped shards / masked lanes / dead rows
+                dst = [t.vals.copy() for t in tables]
+
+                loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
+                rows_skipped = 0
+                if plan.lane_masks is None:
+                    groups_args = [
+                        (m, t.combine) if m is not None else None
+                        for m, t in zip(msgs, tables)
+                    ]
+                    for gi, res in self.executor.run_groups(
+                        loaded, groups_args, xstats
+                    ):
+                        sl = group_live[gi]
+                        acc = np.asarray(res.acc, dtype=np.float32)[sl]
+                        tables[gi].apply_rows(acc, sl, res.v0, res.v1, dst[gi])
+                else:
+                    rows_skipped = self._run_masked(
+                        plan, loaded, tables, group_live, msgs, dst, xstats
+                    )
+
+                # ------------------------------------ commit + attribution
+                dio = engine.store.io - io0
+                shares = plan.lane_shares(total_live)
+                bytes_per_load = (
+                    dio.bytes_read / plan.num_planned if plan.num_planned
+                    else 0.0
+                )
+                offset = 0
+                for gi, (t, sl) in enumerate(zip(tables, group_live)):
+                    if not len(sl):
+                        continue
+                    t.attribute(shares[offset:offset + len(sl)], bytes_per_load)
+                    offset += len(sl)
+                    t.advance(dst[gi])
+
+                # ----------------------------------- retirement + backfill
+                retired = sum(t.retire(emit) for t in tables)
+                backfilled = 0
+                if backfill is not None:
+                    for t in tables:
+                        while True:
+                            n_free = t.free_count()
+                            if n_free == 0:
+                                break
+                            got = list(backfill(t.group, n_free))
+                            if not got:
+                                break
+                            for seed in got:
+                                res = t.admit(seed)
+                                if res is not None:
+                                    emit(res)  # zero-budget, slot stays free
+                                else:
+                                    backfilled += 1
+
+                self.iter_stats.append(
+                    SweepIterStats(
+                        iteration=it,
+                        live_lanes=total_live,
+                        shards_processed=plan.num_planned,
+                        shards_skipped=plan.num_skipped,
+                        bytes_read=dio.bytes_read,
+                        selective_on=plan.selective_on,
+                        retired=retired,
+                        backfilled=backfilled,
+                        time_s=time.perf_counter() - t0,
+                        lane_rows_skipped=rows_skipped,
+                        groups=n_groups_live,
+                    )
+                )
+                it += 1
+        return results
+
+    # ------------------------------------------------- lane-masked dispatch
+    def _run_masked(
+        self,
+        plan: ShardPlan,
+        loaded,
+        tables: List[LaneTable],
+        group_live: List[np.ndarray],
+        msgs: List[Optional[np.ndarray]],
+        dst: List[np.ndarray],
+        xstats: ExecStats,
+    ) -> int:
+        """Execute the plan with per-shard lane masks: consecutive shards
+        sharing a mask are dispatched together (preserving shard batching)
+        on ONLY the masked lanes' message rows, per group; a group whose
+        lanes are all masked for the run is skipped without a dispatch.
+        Unmasked lanes keep their carried values.  Returns skipped
+        dispatch rows.
+
+        Message sub-matrices are padded to pow2 lane counts (same shape
+        discipline as the batcher) so jit'd lane kernels see bounded
+        shapes; padding rows are zeros and their results are discarded.
+        """
+        batch = getattr(self.executor, "batch_shards", 1)
+        rows_skipped = 0
+        buf: List = []
+        buf_mask: Optional[np.ndarray] = None
+
+        def flush() -> None:
+            nonlocal buf, buf_mask, rows_skipped
+            if not buf:
+                return
+            groups_args: List[Optional[Tuple[np.ndarray, str]]] = []
+            group_slots: List[Optional[np.ndarray]] = []
+            offset = 0
+            for t, sl, m in zip(tables, group_live, msgs):
+                sub = buf_mask[offset:offset + len(sl)]
+                offset += len(sl)
+                dsl = sl[sub] if len(sl) else sl
+                rows_skipped += (len(sl) - len(dsl)) * len(buf)
+                if not len(dsl):
+                    groups_args.append(None)
+                    group_slots.append(None)
+                    continue
+                k = len(dsl)
+                cap_sub = pad_lanes(k) if self.pad_pow2 else k
+                subm = np.zeros((cap_sub, m.shape[1]), dtype=m.dtype)
+                subm[:k] = m[dsl]
+                groups_args.append((subm, t.combine))
+                group_slots.append(dsl)
+            for gi, res in self.executor.run_groups(
+                iter(buf), groups_args, xstats
+            ):
+                dsl = group_slots[gi]
+                acc = np.asarray(res.acc, dtype=np.float32)[: len(dsl)]
+                tables[gi].apply_rows(acc, dsl, res.v0, res.v1, dst[gi])
+            buf, buf_mask = [], None
+
+        for ls in loaded:
+            mask = plan.lane_masks[ls.shard_id]
+            if buf and (
+                len(buf) >= batch or not np.array_equal(mask, buf_mask)
+            ):
+                flush()
+            buf_mask = mask
+            buf.append(ls)
+        flush()
+        return rows_skipped
 
 
 class LaneSweep:
-    """Run per-source queries as lanes of one vertex-centric sweep."""
+    """Run per-source queries of ONE program as lanes of one sweep.
+
+    PR 2's single-program API, now a thin wrapper over :class:`FusedSweep`
+    with a single fusion group: seeds without an explicit program get this
+    sweep's, and ``backfill(n_free)`` keeps its group-less signature.
+    """
 
     def __init__(
         self,
@@ -98,18 +553,36 @@ class LaneSweep:
     ):
         self.engine = engine
         self.program = program
-        self.pad_pow2 = pad_pow2
-        # Lane-aware selective scheduling: when the union plan is selective,
-        # also skip dispatch ROWS for lanes whose Bloom filter matches no
-        # active vertex of the shard (the shard still loads once).  Same
-        # bitwise argument as whole-shard skipping, per lane (DESIGN.md §6).
-        self.lane_selective = lane_selective
-        self.executor = make_lane_executor(
-            engine.backend_name, batch_shards=batch_shards
+        self._fused = FusedSweep(
+            engine,
+            batch_shards=batch_shards,
+            pad_pow2=pad_pow2,
+            lane_selective=lane_selective,
         )
-        self.iter_stats: List[SweepIterStats] = []
 
-    # ------------------------------------------------------------------ run
+    @property
+    def pad_pow2(self) -> bool:
+        return self._fused.pad_pow2
+
+    @property
+    def lane_selective(self) -> bool:
+        return self._fused.lane_selective
+
+    @property
+    def executor(self):
+        return self._fused.executor
+
+    @property
+    def iter_stats(self) -> List[SweepIterStats]:
+        return self._fused.iter_stats
+
+    def _with_program(self, seeds: Sequence[LaneSeed]) -> List[LaneSeed]:
+        return [
+            s if s.program is not None
+            else dataclasses.replace(s, program=self.program)
+            for s in seeds
+        ]
+
     def run(
         self,
         seeds: Sequence[LaneSeed],
@@ -117,235 +590,15 @@ class LaneSweep:
         backfill: Optional[Callable[[int], Sequence[LaneSeed]]] = None,
         on_retire: Optional[Callable[[LaneResult], None]] = None,
     ) -> List[LaneResult]:
-        """Sweep until every lane has retired and ``backfill`` is dry.
-
-        ``backfill(n_free)`` is called whenever slots free up; it may return
-        up to ``n_free`` new seeds which start their own iteration 0
-        mid-sweep.  ``on_retire`` fires the moment a lane finishes — the
-        service resolves that query's future immediately rather than at
-        sweep end.
-        """
+        """Sweep until every lane has retired and ``backfill`` is dry."""
         if not seeds:
             return []
-        engine, prog = self.engine, self.program
-        meta = engine.meta
-        n = meta.num_vertices
-
-        results: List[LaneResult] = []
-
-        def finish_zero_budget(seed: LaneSeed) -> None:
-            """``max_iters <= 0`` parity with ``VSWEngine.run``: zero
-            iterations, init values, not converged — never takes a lane."""
-            v, _ = prog.init_lane(meta, seed.source)
-            res = LaneResult(
-                token=seed.token, source=seed.source,
-                values=v.astype(np.float32), iterations=0, converged=False,
-                bytes_read=0.0, shard_loads=0.0,
-            )
-            results.append(res)
-            if on_retire is not None:
-                on_retire(res)
-
-        live_seeds = []
-        for seed in seeds:
-            if seed.max_iters > 0:
-                live_seeds.append(seed)
-            else:
-                finish_zero_budget(seed)
-        seeds = live_seeds
-        if not seeds:
-            return results
-        capacity = pad_lanes(len(seeds)) if self.pad_pow2 else len(seeds)
-
-        vals = np.zeros((capacity, n), dtype=np.float32)
-        active = np.zeros((capacity, n), dtype=bool)
-        live = np.zeros(capacity, dtype=bool)
-        sources = np.full(capacity, -1, dtype=np.int64)
-        lane_iters = np.zeros(capacity, dtype=np.int64)
-        lane_bytes = np.zeros(capacity, dtype=np.float64)
-        lane_loads = np.zeros(capacity, dtype=np.float64)
-        lane_seed: List[Optional[LaneSeed]] = [None] * capacity
-
-        def admit(slot: int, seed: LaneSeed) -> None:
-            v, a = prog.init_lane(meta, seed.source)
-            vals[slot] = v
-            active[slot] = a
-            live[slot] = True
-            sources[slot] = seed.source
-            lane_iters[slot] = 0
-            lane_bytes[slot] = 0.0
-            lane_loads[slot] = 0.0
-            lane_seed[slot] = seed
-
-        for slot, seed in enumerate(seeds):
-            admit(slot, seed)
-
-        pstats = PipelineStats()
-        xstats = ExecStats()
-        it = 0
-        # One pinned delta session for the WHOLE sweep: mutations published
-        # while lanes are in flight become visible to the NEXT sweep, never
-        # mid-query — every result is computed at exactly one graph version.
-        with engine._sweep_session():
-            while live.any():
-                t0 = time.perf_counter()
-                io0 = engine.store.io.snapshot()
-                pstats.reset()
-                xstats.reset()
-
-                live_slots = np.flatnonzero(live)
-                union_ids = np.flatnonzero(active[live].any(axis=0)).astype(np.int64)
-                lane_active = None
-                if self.lane_selective and len(live_slots) > 1:
-                    lane_active = [
-                        np.flatnonzero(active[k]).astype(np.int64)
-                        for k in live_slots
-                    ]
-                plan = engine.scheduler.plan(union_ids, lane_active=lane_active)
-                msgs = prog.pre(vals, meta.out_deg).astype(np.float32)
-                dst = vals.copy()  # carried over for skipped shards/lanes
-
-                loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
-                rows_skipped = 0
-                if plan.lane_masks is None:
-                    for res in self.executor.run(loaded, msgs, prog.combine, xstats):
-                        new = prog.apply(
-                            np.asarray(res.acc, dtype=vals.dtype),
-                            vals[:, res.v0: res.v1],
-                            meta,
-                            res.v0,
-                            sources,
-                        )
-                        dst[:, res.v0: res.v1] = new
-                else:
-                    rows_skipped = self._run_masked(
-                        plan, loaded, live_slots, msgs, vals, dst,
-                        sources, xstats,
-                    )
-                # Retired / free lanes stay frozen at their final values.
-                dst[~live] = vals[~live]
-
-                new_active = prog.is_active(dst, vals)
-                new_active[~live] = False
-                vals, active = dst, new_active
-                lane_iters[live] += 1
-
-                # --------------------------------- per-lane cost attribution
-                dio = engine.store.io - io0
-                n_live = int(live.sum())
-                lane_bytes[live] += dio.bytes_read / n_live
-                lane_loads[live] += plan.num_planned / n_live
-
-                # ----------------------------------- retirement + backfill
-                retired = 0
-                for k in np.flatnonzero(live):
-                    seed = lane_seed[k]
-                    converged = not active[k].any()
-                    if converged or lane_iters[k] >= seed.max_iters:
-                        live[k] = False
-                        active[k] = False
-                        retired += 1
-                        res_k = LaneResult(
-                            token=seed.token,
-                            source=seed.source,
-                            values=vals[k].copy(),
-                            iterations=int(lane_iters[k]),
-                            converged=converged,
-                            bytes_read=float(lane_bytes[k]),
-                            shard_loads=float(lane_loads[k]),
-                        )
-                        results.append(res_k)
-                        if on_retire is not None:
-                            on_retire(res_k)
-
-                backfilled = 0
-                if backfill is not None:
-                    free = list(np.flatnonzero(~live))
-                    while free:
-                        got = list(backfill(len(free)))
-                        if not got:
-                            break
-                        for seed in got:
-                            if seed.max_iters <= 0:
-                                finish_zero_budget(seed)  # slot stays free
-                            else:
-                                admit(int(free.pop(0)), seed)
-                                backfilled += 1
-
-                self.iter_stats.append(
-                    SweepIterStats(
-                        iteration=it,
-                        live_lanes=n_live,
-                        shards_processed=plan.num_planned,
-                        shards_skipped=plan.num_skipped,
-                        bytes_read=dio.bytes_read,
-                        selective_on=plan.selective_on,
-                        retired=retired,
-                        backfilled=backfilled,
-                        time_s=time.perf_counter() - t0,
-                        lane_rows_skipped=rows_skipped,
-                    )
-                )
-                it += 1
-        return results
-
-    # ------------------------------------------------- lane-masked dispatch
-    def _run_masked(
-        self,
-        plan: ShardPlan,
-        loaded,
-        live_slots: np.ndarray,
-        msgs: np.ndarray,
-        vals: np.ndarray,
-        dst: np.ndarray,
-        sources: np.ndarray,
-        xstats: ExecStats,
-    ) -> int:
-        """Execute the plan with per-shard lane masks: consecutive shards
-        sharing a mask are dispatched together (preserving shard batching)
-        on ONLY the masked lanes' message rows; unmasked lanes keep their
-        carried values for that interval.  Returns skipped dispatch rows.
-
-        Message sub-matrices are padded to pow2 lane counts (same shape
-        discipline as the batcher) so jit'd lane kernels see bounded
-        shapes; padding rows are zeros and their results are discarded.
-        """
-        prog, meta = self.program, self.engine.meta
-        batch = getattr(self.executor, "batch_shards", 1)
-        n_live = len(live_slots)
-        rows_skipped = 0
-        group: List = []
-        group_mask: Optional[np.ndarray] = None
-
-        def flush() -> None:
-            nonlocal group, group_mask, rows_skipped
-            if not group:
-                return
-            slots = live_slots[group_mask]
-            m = len(slots)
-            cap_sub = pad_lanes(m) if self.pad_pow2 else m
-            sub = np.zeros((cap_sub, msgs.shape[1]), dtype=msgs.dtype)
-            sub[:m] = msgs[slots]
-            for res in self.executor.run(group, sub, prog.combine, xstats):
-                acc = np.asarray(res.acc, dtype=vals.dtype)[:m]
-                new = prog.apply(
-                    acc,
-                    vals[slots, res.v0: res.v1],
-                    meta,
-                    res.v0,
-                    sources[slots],
-                )
-                dst[slots, res.v0: res.v1] = new
-            rows_skipped += (n_live - m) * len(group)
-            group, group_mask = [], None
-
-        for ls in loaded:
-            mask = plan.lane_masks[ls.shard_id]
-            if group and (
-                len(group) >= batch or not np.array_equal(mask, group_mask)
-            ):
-                flush()
-            group_mask = mask
-            group.append(ls)
-        flush()
-        return rows_skipped
+        fused_backfill = None
+        if backfill is not None:
+            def fused_backfill(_group: int, n_free: int):
+                return self._with_program(backfill(n_free))
+        return self._fused.run(
+            [self._with_program(seeds)],
+            backfill=fused_backfill,
+            on_retire=on_retire,
+        )

@@ -1,16 +1,17 @@
-"""Run the ingestion + delta tests under a hard address-space cap (CI).
+"""Run the ingestion + delta + fusion tests under a hard AS cap (CI).
 
 The streamed ingestion pipeline promises O(chunk + one shard) peak memory,
-and the delta subsystem promises O(affected shard + pending runs) per
-publish/decode.  ``test_ingest.py`` asserts the former with tracemalloc
-(precise, catches any O(|E|) regression); this runner adds defense in
-depth: the whole pytest process runs under ``RLIMIT_AS``, so a regression
-that dodges tracemalloc (native allocations, mmap-backed arrays) still
-dies loudly with ``MemoryError`` instead of quietly passing on a big-RAM
-CI host.
+the delta subsystem promises O(affected shard + pending runs) per
+publish/decode, and the fused serving layer's lane tables are O(groups x
+lanes x V) regardless of |E|.  ``test_ingest.py`` asserts the first with
+tracemalloc (precise, catches any O(|E|) regression); this runner adds
+defense in depth: the whole pytest process runs under ``RLIMIT_AS``, so a
+regression that dodges tracemalloc (native allocations, mmap-backed
+arrays) still dies loudly with ``MemoryError`` instead of quietly passing
+on a big-RAM CI host.
 
-Engine-booting tests (``e2e`` in the name) import jax and are excluded —
-XLA's address-space reservations are unrelated to what this cap guards.
+jax-touching tests (``e2e`` in the name) are excluded — XLA's
+address-space reservations are unrelated to what this cap guards.
 
 Usage (CI)::
 
@@ -45,6 +46,7 @@ def main() -> int:
             "-q",
             os.path.join(here, "test_ingest.py"),
             os.path.join(here, "test_delta.py"),
+            os.path.join(here, "test_fusion.py"),
             "-k",
             "not e2e",
         ]
