@@ -28,6 +28,12 @@ Mapping to the paper:
                      written as |E| scales past the chunk/spill budget; the
                      streamed peak must stay flat while the in-memory peak
                      grows O(|E|).
+  fig_mesh         — mesh-sharded VSW sweeps (repro/serve MeshSweep,
+                     DESIGN.md §10): host-read bytes per sweep and per-device
+                     dispatch/shard counts at mesh sizes D ∈ {1, 2, 4, 8};
+                     host reads must stay FLAT in D (each shard is decoded
+                     once and sliced per destination device) while per-device
+                     shard counts sum to the D=1 total.
   fig_delta        — live edge mutations (repro/delta): per-sweep wall time
                      and bytes read as the pending-delta fraction grows,
                      before and after background-style recompaction, with
@@ -542,6 +548,93 @@ def fig_ingest(rows: List[str], *, quick: bool = False) -> None:
     )
 
 
+def fig_mesh(rows: List[str], *, quick: bool = False) -> None:
+    """Mesh-sharded VSW sweeps: one host read, D device slices (ISSUE 6
+    acceptance; DESIGN.md §10).
+
+    A PPR lane group runs under :class:`MeshSweep` at mesh sizes
+    D ∈ {1, 2, 4, 8} on the cache-miss-heavy config (no edge cache,
+    throttled storage channel).  The numpy emulation exercises the exact
+    partition routing and accounting of the SPMD path without importing
+    jax, so this section runs anywhere — the CI mesh job additionally
+    runs it under 8 forced host devices.
+
+    Invariants asserted: host-read bytes per sweep are FLAT in D (every
+    planned shard is decoded ONCE and sliced per destination device — the
+    mesh never multiplies host I/O), per-device shard counts sum to the
+    D=1 total each iteration, and the D>1 results are bitwise equal to
+    the D=1 run.
+    """
+    from repro.serve import LaneSeed, MeshSweep
+
+    if quick:
+        g = rmat_graph(5_000, 80_000, seed=13)
+        iters, shards, lanes = 3, 6, 4
+    else:
+        g = _mk_graph(seed=13)
+        iters, shards, lanes = 5, SHARDS, 8
+    rng = np.random.default_rng(14)
+    sources = rng.choice(g.num_vertices, size=lanes, replace=False)
+
+    bytes_per_sweep: Dict[int, float] = {}
+    shard_totals: Dict[int, int] = {}
+    ref_vals: Dict[int, List[np.ndarray]] = {}
+    for D in (1, 2, 4, 8):
+        with tempfile.TemporaryDirectory() as d:
+            eng = VSWEngine.from_graph(
+                g, d, num_shards=shards, backend="numpy", mesh=D,
+                cache_bytes=0, emulate_bw=DISK_BW,
+            )
+            seeds = [[LaneSeed(source=int(s), max_iters=iters,
+                               program=apps.get_lane_program("ppr"))
+                      for s in sources]]
+            sweep = MeshSweep(eng)
+            t0 = time.perf_counter()
+            res = sweep.run(seeds)
+            wall = time.perf_counter() - t0
+            its = sweep.iter_stats
+            for it in its:
+                assert sum(it.device_shards) == it.shards_processed, (
+                    f"D={D}: device shard counts not conserved"
+                )
+            total_bytes = sum(it.bytes_read for it in its)
+            total_shards = sum(it.shards_processed for it in its)
+            total_disp = sum(sum(it.device_dispatches) for it in its)
+            bytes_per_sweep[D] = total_bytes / max(len(its), 1)
+            shard_totals[D] = total_shards
+            ref_vals[D] = [r.values for r in res]
+            eng.close()
+            rows.append(
+                f"fig_mesh_ppr_D{D},{wall / max(len(its), 1) * 1e6:.0f},"
+                f"bytes_per_sweep={bytes_per_sweep[D]:.0f}"
+                f";shards_total={total_shards}"
+                f";device_dispatches_total={total_disp}"
+                f";sweeps={len(its)}"
+            )
+
+    flat = bytes_per_sweep[8] / max(bytes_per_sweep[1], 1e-9)
+    bitwise = all(
+        np.array_equal(a, b)
+        for D in (2, 4, 8)
+        for a, b in zip(ref_vals[1], ref_vals[D])
+    )
+    rows.append(
+        f"fig_mesh_host_read_flatness,{flat:.4f},"
+        f"bytes_per_sweep_D8_over_D1={flat:.4f}x"
+        f";shards_conserved="
+        f"{all(shard_totals[D] == shard_totals[1] for D in (2, 4, 8))}"
+        f";bitwise_vs_D1={bitwise}"
+    )
+    assert bitwise, "mesh results diverged from the D=1 run"
+    assert abs(flat - 1.0) < 0.01, (
+        f"host-read bytes scaled {flat:.4f}x from D=1 to D=8 — the mesh "
+        "must slice ONE host read, never multiply it"
+    )
+    assert all(shard_totals[D] == shard_totals[1] for D in (2, 4, 8)), (
+        "per-device shard counts no longer sum to the D=1 total"
+    )
+
+
 def fig_delta(rows: List[str], *, quick: bool = False) -> None:
     """Sweep cost vs pending-delta fraction (ISSUE 4 tentpole).
 
@@ -659,6 +752,7 @@ SECTIONS = {
     "fig_serve": lambda rows, quick: fig_serve(rows, quick=quick),
     "fig_fusion": lambda rows, quick: fig_fusion(rows, quick=quick),
     "fig_ingest": lambda rows, quick: fig_ingest(rows, quick=quick),
+    "fig_mesh": lambda rows, quick: fig_mesh(rows, quick=quick),
     "fig_delta": lambda rows, quick: fig_delta(rows, quick=quick),
 }
 
@@ -678,10 +772,46 @@ def run(rows: List[str], *, quick: bool = False,
         fig_serve(rows, quick=True)
         fig_fusion(rows, quick=True)
         fig_ingest(rows, quick=True)
+        fig_mesh(rows, quick=True)
         fig_delta(rows, quick=True)
         return
     for name in SECTIONS:
         SECTIONS[name](rows, quick)
+
+
+def merge_consolidated(path: str, rows: List[str], *, quick: bool,
+                       wall_s: float) -> Dict:
+    """Append this run's rows to the persistent perf trajectory at ``path``.
+
+    The consolidated file keeps one time-ordered list of samples per row
+    name (``trajectory[name] -> [{ts, us_per_call, derived, quick}, ...]``)
+    plus a run log, so CI artifacts accumulate a cross-PR perf history in
+    ONE ``BENCH_graphmp.json`` instead of a scatter of per-section files.
+    A missing or corrupt file starts a fresh trajectory rather than
+    failing the bench run.
+    """
+    import json
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict) or "trajectory" not in doc:
+            raise ValueError("not a consolidated bench file")
+    except (OSError, ValueError):
+        doc = {"bench": "graphmp", "trajectory": {}, "runs": []}
+    ts = time.strftime("%Y-%m-%dT%H:%M:%S")
+    doc.setdefault("runs", []).append(
+        {"ts": ts, "quick": quick, "wall_s": wall_s, "num_rows": len(rows)}
+    )
+    traj = doc.setdefault("trajectory", {})
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        traj.setdefault(name, []).append(
+            {"ts": ts, "us_per_call": us, "derived": derived, "quick": quick}
+        )
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc
 
 
 def main() -> None:
@@ -698,6 +828,10 @@ def main() -> None:
                     help="small graphs, smoke subset (pipeline + serve)")
     ap.add_argument("--out", default=None,
                     help="also write rows as JSON to this path")
+    ap.add_argument("--consolidated", default=None, metavar="PATH",
+                    help="merge rows into a persistent perf-trajectory JSON "
+                         "(appends per-name samples; creates the file if "
+                         "missing)")
     args = ap.parse_args()
 
     rows: List[str] = []
@@ -720,6 +854,10 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.out}")
+    if args.consolidated:
+        merge_consolidated(args.consolidated, rows, quick=args.quick,
+                           wall_s=wall)
+        print(f"# merged {len(rows)} rows into {args.consolidated}")
 
 
 if __name__ == "__main__":

@@ -417,10 +417,17 @@ class ExecStats:
     dispatches: int = 0
     shards_executed: int = 0
     exec_s: float = 0.0
+    #: mesh executors only: device id -> shard applications / SPMD launches
+    #: routed to that device (empty on single-device executors).
+    #: Conservation: sum(device_shards.values()) == shards_executed.
+    device_shards: Dict[int, int] = dataclasses.field(default_factory=dict)
+    device_dispatches: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def reset(self) -> None:
         self.dispatches = self.shards_executed = 0
         self.exec_s = 0.0
+        self.device_shards = {}
+        self.device_dispatches = {}
 
 
 class PerShardExecutor:
@@ -576,6 +583,123 @@ class BatchedEllExecutor:
                     ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc),
                     batch_size=len(buf),
                 )
+
+
+class MeshLaneExecutor:
+    """SPMD executor: route each loaded shard to its owning device's batch
+    and dispatch every device's batch in ONE ``shard_map`` launch per live
+    program group — "1 host read, G x D slices" (DESIGN.md §10).
+
+    Shards buffer per device (by :class:`MeshPartition` ownership) up to
+    ``batch_shards`` each; a flush dispatches ALL devices together, so the
+    dispatch count is per SPMD program, not per device — each group's
+    launch covers every device's slice.  Devices whose buffer is empty this
+    round (inactive destination intervals pruned by the scheduler) ride
+    along as identity-padded zero blocks inside the same program.
+
+    ``backend="numpy"`` is the mesh EMULATION path: identical routing,
+    flush cadence and accounting, but per-shard numpy-oracle calls and no
+    jax import — the bitwise reference for the jnp/pallas mesh paths, safe
+    under the memory-capped (jax-free) test tier.
+    """
+
+    def __init__(self, backend: str, partition, mesh=None, *,
+                 batch_shards: int = 1, lanes: bool = False,
+                 interpret: bool = True):
+        if backend not in LANE_BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend}; have {sorted(LANE_BACKENDS)}"
+            )
+        if backend != "numpy" and mesh is None:
+            raise ValueError("jnp/pallas mesh execution needs a jax Mesh")
+        if batch_shards < 1:
+            raise ValueError("batch_shards must be >= 1")
+        self.backend_name = backend
+        self.partition = partition
+        self.mesh = mesh
+        self.batch_shards = batch_shards
+        self.lanes = lanes
+        self.interpret = interpret
+
+    def run(
+        self,
+        loaded: Iterable[LoadedShard],
+        msgs: np.ndarray,
+        combine: str,
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[ExecResult]:
+        """Single-program path (``VSWEngine.run``): the message array rides
+        as a 1-lane group; the lane backends reduce to the plain ones for a
+        single lane, so this is bitwise the single-device engine sweep."""
+        groups: Sequence[GroupDispatch] = [(np.asarray(msgs)[None], combine)]
+        for _, res in self.run_groups(loaded, groups, stats):
+            yield ExecResult(res.shard_id, res.v0, res.v1, res.acc[0],
+                             batch_size=res.batch_size)
+
+    def run_groups(
+        self,
+        loaded: Iterable[LoadedShard],
+        groups: Sequence[GroupDispatch],
+        stats: Optional[ExecStats] = None,
+    ) -> Iterator[Tuple[int, ExecResult]]:
+        n_dev = self.partition.n_dev
+        bufs: List[List[LoadedShard]] = [[] for _ in range(n_dev)]
+        for ls in loaded:
+            d = self.partition.device_of(ls.shard_id)
+            bufs[d].append(ls)
+            if len(bufs[d]) >= self.batch_shards:
+                yield from self._flush(bufs, groups, stats)
+                bufs = [[] for _ in range(n_dev)]
+        if any(bufs):
+            yield from self._flush(bufs, groups, stats)
+
+    def _flush(self, bufs, groups, stats):
+        live = [(gi, ga) for gi, ga in enumerate(groups) if ga is not None]
+        if not live:
+            return
+        t0 = time.perf_counter()
+        results = []
+        if self.backend_name == "numpy":
+            fn = LANE_BACKENDS["numpy"]
+            for gi, (msgs, combine) in live:
+                for buf in bufs:
+                    for ls in buf:
+                        acc = np.asarray(fn(ls.csr, ls.ell, msgs, combine))
+                        results.append((gi, ls, acc, len(buf)))
+        else:
+            from repro.kernels.spmv_ell import ops as spmv_ops
+
+            accs_by_group, _ = spmv_ops.ell_update_lanes_mesh_multi(
+                [[ls.ell for ls in buf] for buf in bufs],
+                [ga[0] for _, ga in live],
+                [ga[1] for _, ga in live],
+                mesh=self.mesh, backend=self.backend_name,
+                interpret=self.interpret,
+            )
+            for (gi, _), accs_dev in zip(live, accs_by_group):
+                for buf, accs in zip(bufs, accs_dev):
+                    for ls, acc in zip(buf, accs):
+                        results.append((gi, ls, np.asarray(acc), len(buf)))
+        if stats is not None:
+            total = sum(len(b) for b in bufs)
+            # One SPMD launch per group covers every device's slice; the
+            # numpy emulation books the same way so accounting is
+            # backend-invariant (fig_mesh asserts conservation on it).
+            stats.dispatches += len(live)
+            stats.shards_executed += total * len(live)
+            for d, buf in enumerate(bufs):
+                if buf:
+                    stats.device_shards[d] = (
+                        stats.device_shards.get(d, 0) + len(buf) * len(live)
+                    )
+                    stats.device_dispatches[d] = (
+                        stats.device_dispatches.get(d, 0) + len(live)
+                    )
+            stats.exec_s += time.perf_counter() - t0
+        for gi, ls, acc, bs in results:
+            ref = ls.ref
+            yield gi, ExecResult(ls.shard_id, ref.v0, ref.v1, acc,
+                                 batch_size=bs)
 
 
 def make_executor(backend: str, *, batch_shards: int = 1):

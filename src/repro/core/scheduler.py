@@ -60,6 +60,14 @@ class ShardPlan:
     active_ratio: float
     plan_time_s: float
     lane_masks: Optional[Dict[int, np.ndarray]] = None
+    #: mesh plans only (scheduler has a partition): planned shards grouped
+    #: by owning device, interval order within each device; ``shards`` is
+    #: then the round-robin interleave of these groups so the executor's
+    #: per-device buffers fill evenly.  Devices whose destination intervals
+    #: are all inactive get an EMPTY group — pruned host-side, they ride the
+    #: SPMD program as identity blocks without a host read.  ``None`` on
+    #: single-device plans.
+    device_shards: Optional[List[List[int]]] = None
 
     @property
     def num_planned(self) -> int:
@@ -114,6 +122,10 @@ class ShardScheduler:
         self.filters: Optional[List[BloomFilter]] = None
         self.exact_sources: Optional[List[np.ndarray]] = None
         self.loading_io: Optional[IOStats] = None
+        #: set by the engine's mesh boot path (a
+        #: :class:`repro.core.distributed.MeshPartition`); planning stays
+        #: host-side — the partition only regroups/reorders the planned list.
+        self.partition = None
 
     # ------------------------------------------------------------- loading
     def build_filters(
@@ -222,12 +234,13 @@ class ShardScheduler:
             and self.filters is not None
         )
         if not use_selective:
-            return ShardPlan(
-                shards=list(range(self.meta.num_shards)),
+            return self._finalize(
+                planned=list(range(self.meta.num_shards)),
                 skipped=[],
                 selective_on=False,
                 active_ratio=active_ratio,
-                plan_time_s=time.perf_counter() - t0,
+                t0=t0,
+                lane_masks=None,
             )
         planned: List[int] = []
         skipped: List[int] = []
@@ -248,11 +261,34 @@ class ShardScheduler:
         else:
             for p in range(self.meta.num_shards):
                 (planned if self.shard_is_active(p, active_ids) else skipped).append(p)
-        return ShardPlan(
-            shards=planned,
+        return self._finalize(
+            planned=planned,
             skipped=skipped,
             selective_on=True,
             active_ratio=active_ratio,
+            t0=t0,
+            lane_masks=lane_masks,
+        )
+
+    def _finalize(self, *, planned, skipped, selective_on, active_ratio, t0,
+                  lane_masks) -> ShardPlan:
+        """Shared plan tail: with a mesh partition, group the planned list
+        by owning device and interleave round-robin (device-balanced load
+        order for the executor's per-device buffers); device pruning falls
+        out — a device with no planned shard gets an empty group and no
+        host read.  Reordering is safe: per-shard accumulators touch
+        disjoint destination intervals and ``lane_shares``/``lane_masks``
+        are order-free."""
+        device_shards = None
+        if self.partition is not None:
+            device_shards = self.partition.group(planned)
+            planned = type(self.partition).interleave(device_shards)
+        return ShardPlan(
+            shards=planned,
+            skipped=skipped,
+            selective_on=selective_on,
+            active_ratio=active_ratio,
             plan_time_s=time.perf_counter() - t0,
             lane_masks=lane_masks,
+            device_shards=device_shards,
         )

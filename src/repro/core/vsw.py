@@ -50,6 +50,7 @@ from .cache import ShardCache
 from .executor import (
     BACKENDS,
     ExecStats,
+    MeshLaneExecutor,
     make_executor,
     update_shard_jnp,
     update_shard_numpy,
@@ -90,6 +91,14 @@ class IterStats:
     exec_s: float = 0.0  # backend dispatch time
     dispatches: int = 0  # kernel dispatches (< processed when batching)
     prefetch_depth: int = 0
+    # ---- mesh sweeps (DESIGN.md §10); empty tuples on single-device runs.
+    # Conservation: sum(device_shards) == shards_processed and
+    # sum(device_bytes) == bytes_read — the host read each shard ONCE and
+    # attribution splits it by destination-device ownership, never
+    # multiplies it by D.
+    device_shards: tuple = ()  # planned shards owned per device
+    device_dispatches: tuple = ()  # SPMD launches that carried work per device
+    device_bytes: tuple = ()  # bytes_read attributed per device
 
 
 @dataclasses.dataclass
@@ -132,12 +141,33 @@ class VSWEngine:
         device_resident: bool = False,
         prefetch_depth: int = 2,
         batch_shards: int = 1,
+        mesh=None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend}; have {sorted(BACKENDS)}")
         self.store = store
         self.meta = store.read_meta()
         self.backend_name = backend
+        # ---- mesh boot path (DESIGN.md §10).  ``mesh`` is an int device
+        # count or a ready jax Mesh.  numpy + int is the jax-free mesh
+        # EMULATION (same partition/plan/accounting, oracle compute); the
+        # ELL backends build a host mesh from the count — raising
+        # launch.mesh's uniform error when the process has too few devices.
+        self.partition = None
+        self.mesh = None
+        if mesh is not None:
+            from .distributed import MeshPartition
+
+            if isinstance(mesh, (int, np.integer)):
+                n_dev = int(mesh)
+                if backend != "numpy":
+                    from repro.launch.mesh import make_host_mesh
+
+                    self.mesh = make_host_mesh((n_dev,), ("dev",))
+            else:
+                self.mesh = mesh
+                n_dev = int(np.prod(mesh.devices.shape))
+            self.partition = MeshPartition.from_meta(self.meta, n_dev)
         if cache_bytes > 0 and cache_mode == 0:
             # GraphH-style auto mode selection on a sample shard (§II-D-2)
             from .cache import select_cache_mode
@@ -182,6 +212,7 @@ class VSWEngine:
             bloom_fp=bloom_fp,
             exact_selective=exact_selective,
         )
+        self.scheduler.partition = self.partition
         self.scheduler.build_filters(
             store, warm_cache=self.cache, cache_fmt=self._fmt
         )
@@ -192,7 +223,13 @@ class VSWEngine:
             depth=prefetch_depth,
             resident=self._device_shards if self.device_resident else None,
         )
-        self.executor = make_executor(backend, batch_shards=batch_shards)
+        if self.partition is not None:
+            self.executor = MeshLaneExecutor(
+                backend, self.partition, self.mesh,
+                batch_shards=batch_shards, lanes=False,
+            )
+        else:
+            self.executor = make_executor(backend, batch_shards=batch_shards)
         # Live-mutation state (repro.delta): last overlay version whose
         # metadata/filter changes this engine has absorbed.  Refreshing at
         # sweep start (never mid-sweep) is what keeps a sweep's degrees,
@@ -439,6 +476,19 @@ class VSWEngine:
             src_vals = dst_vals
             dio = self.store.io - io0
 
+            dev_shards = dev_disp = dev_bytes = ()
+            if plan.device_shards is not None:
+                bpl = (
+                    dio.bytes_read / plan.num_planned if plan.num_planned
+                    else 0.0
+                )
+                dev_shards = tuple(len(g) for g in plan.device_shards)
+                dev_bytes = tuple(len(g) * bpl for g in plan.device_shards)
+                dev_disp = tuple(
+                    xstats.device_dispatches.get(d, 0)
+                    for d in range(len(plan.device_shards))
+                )
+
             stats.append(
                 IterStats(
                     iteration=it,
@@ -459,6 +509,9 @@ class VSWEngine:
                     exec_s=xstats.exec_s,
                     dispatches=xstats.dispatches,
                     prefetch_depth=self.pipeline.depth,
+                    device_shards=dev_shards,
+                    device_dispatches=dev_disp,
+                    device_bytes=dev_bytes,
                 )
             )
             if record_values_history:

@@ -100,3 +100,28 @@ class ShardingCtx:
 
 
 LOCAL_CTX = ShardingCtx()  # unsharded (smoke tests, single CPU)
+
+
+#: logical axes of the GRAPH workload (mesh sweeps, DESIGN.md §10):
+#: - "vertex": destination-vertex dim — sharded over every mesh axis (the
+#:   per-device resident slice of the vertex / lane matrices),
+#: - "device": the stacked per-device ELL block dim — sharded the same way
+#:   (device d's block lands on device d),
+#: - "lane":  the serving lane (concurrent-query) dim — replicated; lanes
+#:   are vmapped, the vertex axis underneath them is what's sharded.
+GRAPH_RULES: Dict[str, MeshAxes] = {
+    "vertex": (),  # filled per-mesh by graph_ctx (all axes of that mesh)
+    "device": (),
+    "lane": None,
+}
+
+
+def graph_ctx(mesh: Mesh) -> ShardingCtx:
+    """A :class:`ShardingCtx` for graph mesh sweeps: every mesh axis shards
+    the vertex/device dims, lanes replicate.  The mesh kernel builds its
+    ``shard_map`` specs through :meth:`ShardingCtx.spec`, so the graph path
+    shares the model stack's logical-axis mechanism instead of hand-rolled
+    PartitionSpecs."""
+    axes = tuple(mesh.axis_names)
+    rules = {**GRAPH_RULES, "vertex": axes, "device": axes}
+    return ShardingCtx(mesh=mesh, rules=rules)

@@ -276,6 +276,174 @@ def ell_update_lanes_multi(
     return out
 
 
+@functools.lru_cache(maxsize=32)
+def _mesh_lanes_jit(mesh, backend, window, tr, rows, combine, interpret):
+    """One mesh sweep dispatch: shard_map'd lane update over a device axis.
+
+    Device ``d`` receives its own stacked ELL block (leading axis sharded
+    over every mesh axis) plus its slice of the lane-message matrix,
+    all-gathers the full message array (the SEM working set, DESIGN.md §10)
+    and runs THE single-device lane computation on its block:
+
+    - ``backend="jnp"``: the body is :func:`repro.core.executor._ell_fn_impl`
+      — the exact function the single-device jnp lane path vmaps,
+    - ``backend="pallas"``: ``K.ell_partials_masked`` + the segment combine
+      — the exact body of :func:`_update_lanes_jit`'s ``one_lane``.
+
+    Each destination row still belongs to exactly one device (the paper's
+    lock-free property lifted to SPMD), so per-shard accumulators are
+    bitwise those of the single-device path.  The scalar second output is a
+    ``psum``'d count of non-identity accumulator slots — the SPMD activity
+    proxy the iteration stats record without a host round-trip per device.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import graph_ctx
+
+    ctx = graph_ctx(mesh)
+    axes = tuple(mesh.axis_names)
+    ident = IDENTITY[combine]
+
+    if backend == "jnp":
+        from repro.core.executor import _ell_fn_impl
+
+        body = _ell_fn_impl(tr, rows, window, combine)
+    else:
+
+        def body(ell_idx, ell_mask, seg, tile_window, msgs):
+            part = K.ell_partials_masked(
+                ell_idx, ell_mask, tile_window, msgs,
+                window=window, tr=tr, combine=combine, interpret=interpret,
+            )
+            return _segment_combine(part, seg, rows, combine)
+
+    def step(idx, mask, seg, tw, msgs_local):
+        # Leading axis is this device's single ELL block.
+        idx, mask, seg, tw = idx[0], mask[0], seg[0], tw[0]
+        # SEM working set: every device needs the full message array.
+        msgs = jax.lax.all_gather(msgs_local, axes, axis=1, tiled=True)
+        acc = jax.vmap(body, in_axes=(None, None, None, None, 0))(
+            idx, mask, seg, tw, msgs
+        )
+        touched = jax.lax.psum(
+            (acc != jnp.asarray(ident, acc.dtype)).sum(), axes
+        )
+        return acc[None], touched
+
+    in_specs = (
+        ctx.spec("device", None, None),  # ell_idx   [D, n_ell, K]
+        ctx.spec("device", None, None),  # ell_mask  [D, n_ell, K]
+        ctx.spec("device", None),        # seg       [D, n_ell]
+        ctx.spec("device", None),        # tile_window [D, n_tiles]
+        ctx.spec("lane", "vertex"),      # msgs      [K_g, n_pad_dev]
+    )
+    out_specs = (ctx.spec("device", "lane", None), P())
+    fn = shard_map(
+        step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+    return jax.jit(
+        fn,
+        in_shardings=tuple(NamedSharding(mesh, s) for s in in_specs),
+        out_shardings=tuple(NamedSharding(mesh, s) for s in out_specs),
+    )
+
+
+def ell_update_lanes_mesh_multi(
+    device_ells: Sequence[Sequence[EllShard]],  # [D] lists, device order
+    msgs_by_group: Sequence[np.ndarray],  # each [K_g, |V|]
+    combines: Sequence[str],
+    *,
+    mesh,
+    backend: str = "pallas",
+    interpret: bool = True,
+):
+    """Mesh sweeps' dispatch point: 1 host read, G x D device slices.
+
+    ``device_ells[d]`` holds the shards device ``d`` owns this round (the
+    host read each of them ONCE; empty lists idle their device through the
+    SPMD program).  Every device's batch is concatenated with the same
+    :func:`_prep_batch` discipline as the single-device path, then padded
+    to COMMON (pow2-bucketed) shapes so the whole round is one SPMD
+    program; the common padding is the usual identity padding, so each
+    shard's accumulator is bitwise what :func:`ell_update_lanes_batched`
+    computes for its device's batch alone.
+
+    Returns ``(accs_by_group, touched_by_group)`` where
+    ``accs_by_group[g][d]`` lists per-shard ``[K_g, rows]`` accumulators
+    for device ``d`` (empty for idle devices) and ``touched_by_group[g]``
+    is the psum'd non-identity slot count (SPMD activity proxy).
+    """
+    if len(msgs_by_group) != len(combines):
+        raise ValueError("one combine per message group")
+    n_dev = int(np.prod(mesh.devices.shape))
+    if len(device_ells) != n_dev:
+        raise ValueError(
+            f"device_ells has {len(device_ells)} slots for a {n_dev}-device mesh"
+        )
+    batches = {
+        d: _prep_batch(ells)
+        for d, ells in enumerate(device_ells)
+        if len(ells)
+    }
+    if not batches:
+        return [[[] for _ in device_ells] for _ in msgs_by_group], [0] * len(
+            msgs_by_group
+        )
+    first = next(iter(batches.values()))[0]
+    window, tr, k = first.window, first.tr, first.k
+    n_ell_pad = bucket_rows(max(t[1].shape[0] for t in batches.values()), tr)
+    rows_pad = next_pow2(max(t[0].rows_total for t in batches.values()))
+
+    idx_all = np.zeros((n_dev, n_ell_pad, k), dtype=first.ell_idx.dtype)
+    mask_all = np.zeros((n_dev, n_ell_pad, k), dtype=bool)
+    seg_all = np.zeros((n_dev, n_ell_pad), dtype=np.int32)
+    tw_all = np.zeros((n_dev, n_ell_pad // tr), dtype=np.int32)
+    for d, (batch, idx, mask, seg, tw) in batches.items():
+        idx, mask, seg, tw = pad_ell_arrays(
+            idx, mask, seg, tw, idx.shape[0], tr, n_ell_pad
+        )
+        idx_all[d], mask_all[d], seg_all[d], tw_all[d] = idx, mask, seg, tw
+
+    # Messages: pad to full windows (gathers never pass n_pad_v), then to a
+    # multiple of n_dev so the vertex axis shards evenly; the tail past
+    # n_pad_v is never addressed by a valid slot.
+    n_pad_v = first.num_windows * first.window
+    n_pad_dev = -(-n_pad_v // n_dev) * n_dev
+
+    fn_cache = {}
+    accs_by_group = []
+    touched_by_group = []
+    idx_j, mask_j, seg_j, tw_j = (
+        jnp.asarray(idx_all), jnp.asarray(mask_all),
+        jnp.asarray(seg_all), jnp.asarray(tw_all),
+    )
+    for msgs, combine in zip(msgs_by_group, combines):
+        if msgs.ndim != 2:
+            raise ValueError(
+                f"lane update needs [lanes, |V|] messages, got {msgs.shape}"
+            )
+        msgs_p = np.zeros((msgs.shape[0], n_pad_dev), msgs.dtype)
+        msgs_p[:, : msgs.shape[1]] = msgs
+        if combine not in fn_cache:
+            fn_cache[combine] = _mesh_lanes_jit(
+                mesh, backend, window, tr, rows_pad, combine, interpret
+            )
+        acc_all, touched = fn_cache[combine](
+            idx_j, mask_j, seg_j, tw_j, jnp.asarray(msgs_p)
+        )
+        acc_all = np.asarray(acc_all)
+        accs_by_group.append(
+            [
+                batches[d][0].split(acc_all[d]) if d in batches else []
+                for d in range(n_dev)
+            ]
+        )
+        touched_by_group.append(int(touched))
+    return accs_by_group, touched_by_group
+
+
 def ell_update_arrays(
     idx_global: jax.Array,  # [n_ell, K] int32 global source ids
     valid: jax.Array,

@@ -43,6 +43,18 @@ from repro.roofline import hw
 from repro.train.step import make_train_step
 
 
+def _cost_dict(cost) -> Dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    releases return ``[{...}]`` (one dict per computation), newer return
+    the flat dict itself."""
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    seq = list(cost)
+    return dict(seq[0]) if seq else {}
+
+
 # ----------------------------------------------------------------- sharding
 def pick_rules(mesh, shape: ShapeConfig) -> Dict:
     rules = dict(DEFAULT_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES)
@@ -288,7 +300,7 @@ def lower_cell(
     # ---- cost build (mb=1: exact accounting)
     t0 = time.time()
     compiled, hlo = compile_variant(cfg, want_hlo=True, mb=1)
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
 
     # ---- memory build (the config you would run)
     if shape.mode == "train":
@@ -333,16 +345,16 @@ def lower_cell(
 
     if with_outer_correction:
         outer_compiled, _ = compile_variant(_zero_layer(cfg), want_hlo=False)
-        outer_cost = outer_compiled.cost_analysis()
+        outer_cost = _cost_dict(outer_compiled.cost_analysis())
         trips = cfg.num_groups
         extra = None
         if cfg.encdec:
             mid_cfg = dataclasses.replace(cfg, num_encoder_layers=0)
             mid_compiled, _ = compile_variant(mid_cfg, want_hlo=False)
             # encoder scan trips differ from decoder trips
-            extra = [(mid_compiled.cost_analysis(), cfg.num_encoder_layers)]
+            extra = [(_cost_dict(mid_compiled.cost_analysis()), cfg.num_encoder_layers)]
         terms = RA.corrected_terms(
-            dict(cost), dict(outer_cost), hlo, trips, n_chips,
+            cost, outer_cost, hlo, trips, n_chips,
             extra_scans=extra,
         )
         if attn_block_k:
@@ -384,7 +396,7 @@ def lower_graphmp(mesh, workload: str = "eu-2015", verbose: bool = True) -> Dict
     compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled.cost_analysis())
     col = RA.parse_collectives(compiled.as_text(), loop_trips=1)
     terms = RA.RooflineTerms(
         flops_per_dev=float(cost.get("flops", 0.0) or 0.0),

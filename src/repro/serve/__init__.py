@@ -41,6 +41,7 @@ from .sweep import (
     LaneSeed,
     LaneSweep,
     LaneTable,
+    MeshSweep,
     SweepIterStats,
 )
 
@@ -57,5 +58,6 @@ __all__ = [
     "LaneSweep",
     "LaneSeed",
     "LaneResult",
+    "MeshSweep",
     "SweepIterStats",
 ]

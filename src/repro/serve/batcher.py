@@ -26,6 +26,12 @@ Lane counts are padded to the next power of two (:func:`pad_lanes`) so
 the jit'd lane kernels see a bounded set of shapes — at most
 ``log2(max_lanes)+1`` lane extents, mirroring the shape-bucketing of the
 batched shard dispatch (DESIGN.md §4).
+
+Mesh sweeps change none of this (DESIGN.md §10): the lane axis is
+REPLICATED across devices — each device applies every lane to its own
+destination-interval slice — so batching, fusion-set formation and the
+pow2 padding are device-count-independent: the same ``pad_lanes`` buckets
+bound retraces of the shard_map'd lane kernel for every mesh size.
 """
 
 from __future__ import annotations

@@ -126,7 +126,13 @@ class _Pending:
 
 class GraphService:
     """Serve concurrent BFS / SSSP / WCC / PPR queries from one warm
-    engine, fusing and interleaving them onto shared shard streams."""
+    engine, fusing and interleaving them onto shared shard streams.
+
+    Mesh serving (DESIGN.md §10): pass ``mesh=`` through any factory — it
+    flows to :class:`VSWEngine` with the other engine kwargs, and every
+    sweep the worker runs then dispatches per-group per-device slices
+    ("1 host read, G x D slices").  Results are bitwise those of the
+    single-device service; ``stats()["mesh_devices"]`` reports D."""
 
     def __init__(
         self,
@@ -510,6 +516,13 @@ class GraphService:
                 "updates_published": self._updates_done,
                 "updates_pending": len(self._updates),
                 "graph_version": self.graph_version,
+                # mesh boot path (engine kwargs carry mesh=; DESIGN.md §10):
+                # 0 on single-device services.
+                "mesh_devices": (
+                    self.engine.partition.n_dev
+                    if getattr(self.engine, "partition", None) is not None
+                    else 0
+                ),
             }
         delta = self.engine.store.delta
         out["dirty_shards"] = len(delta.dirty_shards()) if delta else 0

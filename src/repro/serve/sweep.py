@@ -48,7 +48,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 import numpy as np
 
 from repro.core.apps import LaneProgram
-from repro.core.executor import ExecStats, make_lane_executor
+from repro.core.executor import ExecStats, MeshLaneExecutor, make_lane_executor
 from repro.core.pipeline import PipelineStats
 from repro.core.scheduler import ShardPlan
 from repro.core.vsw import VSWEngine
@@ -56,7 +56,7 @@ from repro.core.vsw import VSWEngine
 from .batcher import pad_lanes
 
 __all__ = ["LaneSeed", "LaneResult", "SweepIterStats", "LaneTable",
-           "FusedSweep", "LaneSweep"]
+           "FusedSweep", "LaneSweep", "MeshSweep"]
 
 
 @dataclasses.dataclass
@@ -109,6 +109,13 @@ class SweepIterStats:
     lane_rows_skipped: int = 0
     # fusion: program groups live this iteration (1 for plain lane sweeps)
     groups: int = 1
+    # mesh sweeps (DESIGN.md §10); empty tuples on single-device sweeps.
+    # Conserved like IterStats': sum(device_shards) == shards_processed,
+    # sum(device_bytes) == bytes_read — one host read per shard, sliced
+    # G x D ways, never re-read per device.
+    device_shards: tuple = ()
+    device_dispatches: tuple = ()
+    device_bytes: tuple = ()
 
 
 class LaneTable:
@@ -306,9 +313,19 @@ class FusedSweep:
         # masked (the shard still loads once).  Same bitwise argument as
         # whole-shard skipping, per lane (DESIGN.md §6).
         self.lane_selective = lane_selective
-        self.executor = make_lane_executor(
-            engine.backend_name, batch_shards=batch_shards
-        )
+        # An engine booted with ``mesh=`` carries a MeshPartition: lane
+        # dispatch then routes each decoded shard to its owning device and
+        # launches one SPMD program per live group — "1 host read, G x D
+        # slices" (DESIGN.md §10).  Same run_groups surface either way.
+        if getattr(engine, "partition", None) is not None:
+            self.executor = MeshLaneExecutor(
+                engine.backend_name, engine.partition, engine.mesh,
+                batch_shards=batch_shards, lanes=True,
+            )
+        else:
+            self.executor = make_lane_executor(
+                engine.backend_name, batch_shards=batch_shards
+            )
         self.iter_stats: List[SweepIterStats] = []
 
     # ------------------------------------------------------------------ run
@@ -447,6 +464,17 @@ class FusedSweep:
                                 else:
                                     backfilled += 1
 
+                dev_shards = dev_disp = dev_bytes = ()
+                if plan.device_shards is not None:
+                    dev_shards = tuple(len(g) for g in plan.device_shards)
+                    dev_bytes = tuple(
+                        len(g) * bytes_per_load for g in plan.device_shards
+                    )
+                    dev_disp = tuple(
+                        xstats.device_dispatches.get(d, 0)
+                        for d in range(len(plan.device_shards))
+                    )
+
                 self.iter_stats.append(
                     SweepIterStats(
                         iteration=it,
@@ -460,6 +488,9 @@ class FusedSweep:
                         time_s=time.perf_counter() - t0,
                         lane_rows_skipped=rows_skipped,
                         groups=n_groups_live,
+                        device_shards=dev_shards,
+                        device_dispatches=dev_disp,
+                        device_bytes=dev_bytes,
                     )
                 )
                 it += 1
@@ -532,6 +563,33 @@ class FusedSweep:
             buf.append(ls)
         flush()
         return rows_skipped
+
+
+class MeshSweep(FusedSweep):
+    """A :class:`FusedSweep` whose engine was booted with ``mesh=`` — the
+    tentpole API of DESIGN.md §10.
+
+    The partition is the engine's :class:`~repro.core.distributed.
+    MeshPartition`: destination-vertex intervals owned per device, so each
+    destination vertex is updated by exactly ONE device (the paper's
+    lock-free property lifted to SPMD).  Per iteration: one host-side plan,
+    one host read per planned shard, one all-gather of each group's lane
+    messages, one SPMD dispatch per live group covering every device's
+    slice, and a psum'd activity scalar — per-device attribution lands in
+    :class:`SweepIterStats`' ``device_*`` fields, conserved against the
+    sweep totals.  This class only asserts the partition exists; all
+    behavior is the fused sweep's (mesh routing lives in the executor the
+    base constructor already selects).
+    """
+
+    def __init__(self, engine: VSWEngine, **kwargs):
+        if getattr(engine, "partition", None) is None:
+            raise ValueError(
+                "MeshSweep needs an engine booted with mesh= (an int device "
+                "count or a jax Mesh); use FusedSweep for single-device "
+                "engines"
+            )
+        super().__init__(engine, **kwargs)
 
 
 class LaneSweep:

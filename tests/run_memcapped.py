@@ -2,8 +2,10 @@
 
 The streamed ingestion pipeline promises O(chunk + one shard) peak memory,
 the delta subsystem promises O(affected shard + pending runs) per
-publish/decode, and the fused serving layer's lane tables are O(groups x
-lanes x V) regardless of |E|.  ``test_ingest.py`` asserts the first with
+publish/decode, the fused serving layer's lane tables are O(groups x
+lanes x V) regardless of |E|, and the mesh layer's numpy emulation adds
+only O(D) partition metadata on top.  ``test_ingest.py`` asserts the first
+with
 tracemalloc (precise, catches any O(|E|) regression); this runner adds
 defense in depth: the whole pytest process runs under ``RLIMIT_AS``, so a
 regression that dodges tracemalloc (native allocations, mmap-backed
@@ -47,6 +49,7 @@ def main() -> int:
             os.path.join(here, "test_ingest.py"),
             os.path.join(here, "test_delta.py"),
             os.path.join(here, "test_fusion.py"),
+            os.path.join(here, "test_mesh_sweep.py"),
             "-k",
             "not e2e",
         ]
