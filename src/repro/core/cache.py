@@ -31,6 +31,8 @@ import zlib
 from collections import OrderedDict
 from typing import Callable, Dict, Optional
 
+from ..obs import trace
+
 __all__ = ["CacheMode", "CacheStats", "ShardCache", "MODES",
            "mode_iteration_cost", "select_cache_mode"]
 
@@ -110,21 +112,28 @@ class ShardCache:
 
     def get(self, shard_id: int) -> Optional[bytes]:
         """Return the *raw* (decompressed) shard bytes, or None on miss."""
-        with self._lock:
-            blob = self._data.get(shard_id)
-            if blob is None:
-                self.stats.misses += 1
-                return None
-            self._data.move_to_end(shard_id)
-            self.stats.hits += 1
-        t0 = time.perf_counter()
-        raw = self.mode.decompress(blob)
-        with self._lock:
-            self.stats.decompress_time_s += time.perf_counter() - t0
-        return raw
+        with trace.span("cache.get", shard=shard_id) as sp:
+            with self._lock:
+                blob = self._data.get(shard_id)
+                if blob is None:
+                    self.stats.misses += 1
+                    sp.set(hit=False)
+                    return None
+                self._data.move_to_end(shard_id)
+                self.stats.hits += 1
+            sp.set(hit=True)
+            t0 = time.perf_counter()
+            raw = self.mode.decompress(blob)
+            with self._lock:
+                self.stats.decompress_time_s += time.perf_counter() - t0
+            return raw
 
     def put(self, shard_id: int, raw: bytes) -> bool:
         """Insert if it fits; returns True if cached."""
+        with trace.span("cache.put", shard=shard_id, bytes=len(raw)):
+            return self._put(shard_id, raw)
+
+    def _put(self, shard_id: int, raw: bytes) -> bool:
         with self._lock:
             if shard_id in self._data:
                 # Re-put counts as a touch: refresh recency or the entry

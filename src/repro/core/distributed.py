@@ -30,6 +30,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace
 from .apps import COMBINE_IDENTITY, VertexProgram
 from .csr import EllShard, csr_to_ell
 from .graph import Graph
@@ -224,6 +225,21 @@ def build_device_graph_from_store(
     """
     from .sharding import ShardCSR
 
+    with trace.span("mesh.build_device_graph", devices=n_dev):
+        return _build_device_graph_from_store(
+            store, n_dev, window=window, k=k, tr=tr, ShardCSR=ShardCSR
+        )
+
+
+def _build_device_graph_from_store(
+    store,
+    n_dev: int,
+    *,
+    window: Optional[int],
+    k: Optional[int],
+    tr: Optional[int],
+    ShardCSR,
+) -> DeviceGraph:
     meta = store.read_meta()
     if window is None or k is None or tr is None:
         ep = store.ell_params()

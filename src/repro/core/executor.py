@@ -42,6 +42,7 @@ from typing import (
 
 import numpy as np
 
+from ..obs import trace
 from .apps import COMBINE_IDENTITY
 from .csr import EllShard, bucket_rows, concat_ells, next_pow2, pad_ell_arrays
 from .pipeline import LoadedShard
@@ -455,7 +456,10 @@ class PerShardExecutor:
     ) -> Iterator[ExecResult]:
         for ls in loaded:
             t0 = time.perf_counter()
-            acc = self._fn(ls.csr, ls.ell, msgs, combine)
+            with trace.span(
+                "exec.dispatch", shard=ls.shard_id, backend=self.backend_name
+            ):
+                acc = self._fn(ls.csr, ls.ell, msgs, combine)
             if stats is not None:
                 stats.dispatches += 1
                 stats.shards_executed += 1
@@ -481,7 +485,13 @@ class PerShardExecutor:
                     continue
                 msgs, combine = ga
                 t0 = time.perf_counter()
-                acc = self._fn(ls.csr, ls.ell, msgs, combine)
+                with trace.span(
+                    "exec.dispatch",
+                    shard=ls.shard_id,
+                    group=gi,
+                    backend=self.backend_name,
+                ):
+                    acc = self._fn(ls.csr, ls.ell, msgs, combine)
                 if stats is not None:
                     stats.dispatches += 1
                     stats.shards_executed += 1
@@ -530,7 +540,10 @@ class BatchedEllExecutor:
 
     def _flush(self, buf, msgs, combine, stats) -> Iterator[ExecResult]:
         t0 = time.perf_counter()
-        accs = self._fn([ls.ell for ls in buf], msgs, combine)
+        with trace.span(
+            "exec.dispatch", shards=len(buf), backend=self.backend_name
+        ):
+            accs = self._fn([ls.ell for ls in buf], msgs, combine)
         if stats is not None:
             stats.dispatches += 1
             stats.shards_executed += len(buf)
@@ -568,11 +581,17 @@ class BatchedEllExecutor:
         if not live:
             return
         t0 = time.perf_counter()
-        accs_by_group = self._multi_fn(
-            [ls.ell for ls in buf],
-            [ga[0] for _, ga in live],
-            [ga[1] for _, ga in live],
-        )
+        with trace.span(
+            "exec.dispatch",
+            shards=len(buf),
+            groups=len(live),
+            backend=self.backend_name,
+        ):
+            accs_by_group = self._multi_fn(
+                [ls.ell for ls in buf],
+                [ga[0] for _, ga in live],
+                [ga[1] for _, ga in live],
+            )
         if stats is not None:
             stats.dispatches += len(live)
             stats.shards_executed += len(buf) * len(live)
@@ -659,27 +678,34 @@ class MeshLaneExecutor:
             return
         t0 = time.perf_counter()
         results = []
-        if self.backend_name == "numpy":
-            fn = LANE_BACKENDS["numpy"]
-            for gi, (msgs, combine) in live:
-                for buf in bufs:
-                    for ls in buf:
-                        acc = np.asarray(fn(ls.csr, ls.ell, msgs, combine))
-                        results.append((gi, ls, acc, len(buf)))
-        else:
-            from repro.kernels.spmv_ell import ops as spmv_ops
+        with trace.span(
+            "exec.dispatch",
+            groups=len(live),
+            shards=sum(len(b) for b in bufs),
+            devices=sum(1 for b in bufs if b),
+            backend=self.backend_name,
+        ):
+            if self.backend_name == "numpy":
+                fn = LANE_BACKENDS["numpy"]
+                for gi, (msgs, combine) in live:
+                    for buf in bufs:
+                        for ls in buf:
+                            acc = np.asarray(fn(ls.csr, ls.ell, msgs, combine))
+                            results.append((gi, ls, acc, len(buf)))
+            else:
+                from repro.kernels.spmv_ell import ops as spmv_ops
 
-            accs_by_group, _ = spmv_ops.ell_update_lanes_mesh_multi(
-                [[ls.ell for ls in buf] for buf in bufs],
-                [ga[0] for _, ga in live],
-                [ga[1] for _, ga in live],
-                mesh=self.mesh, backend=self.backend_name,
-                interpret=self.interpret,
-            )
-            for (gi, _), accs_dev in zip(live, accs_by_group):
-                for buf, accs in zip(bufs, accs_dev):
-                    for ls, acc in zip(buf, accs):
-                        results.append((gi, ls, np.asarray(acc), len(buf)))
+                accs_by_group, _ = spmv_ops.ell_update_lanes_mesh_multi(
+                    [[ls.ell for ls in buf] for buf in bufs],
+                    [ga[0] for _, ga in live],
+                    [ga[1] for _, ga in live],
+                    mesh=self.mesh, backend=self.backend_name,
+                    interpret=self.interpret,
+                )
+                for (gi, _), accs_dev in zip(live, accs_by_group):
+                    for buf, accs in zip(bufs, accs_dev):
+                        for ls, acc in zip(buf, accs):
+                            results.append((gi, ls, np.asarray(acc), len(buf)))
         if stats is not None:
             total = sum(len(b) for b in bufs)
             # One SPMD launch per group covers every device's slice; the

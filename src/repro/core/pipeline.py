@@ -27,12 +27,29 @@ import weakref
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
+from ..obs import trace
 from .cache import ShardCache
 from .csr import EllShard
 from .sharding import ShardCSR
 from .storage import ShardStore
 
-__all__ = ["LoadedShard", "PipelineStats", "ShardPipeline"]
+__all__ = ["LoadedShard", "PipelineStats", "ShardLoadError", "ShardPipeline"]
+
+
+class ShardLoadError(RuntimeError):
+    """A prefetch-thread (or inline) shard load failed.
+
+    Raised at the *consuming* iterator with the failing shard id attached
+    (``exc.shard_id``) and the original loader exception chained as
+    ``__cause__`` — previously the bare loader exception surfaced from
+    ``Future.result()`` with no indication of which shard died.  When
+    tracing is enabled the failing ``shard.load`` span carries an ``error``
+    attribute, so the failure is visible in the timeline too.
+    """
+
+    def __init__(self, shard_id: int, cause: BaseException):
+        super().__init__(f"shard {shard_id} failed to load: {cause!r}")
+        self.shard_id = shard_id
 
 
 @dataclasses.dataclass
@@ -123,7 +140,25 @@ class ShardPipeline:
     # ---------------------------------------------------------------- load
     def _load(self, p: int) -> LoadedShard:
         """Cache lookup -> disk read -> decode, all off the critical path
-        when called from a prefetch thread."""
+        when called from a prefetch thread.  Any loader failure is wrapped
+        in :class:`ShardLoadError` carrying the shard id, and the
+        ``shard.load`` span (running on the prefetch thread's trace lane)
+        is marked with the error."""
+        with trace.span("shard.load", shard=p) as sp:
+            try:
+                ls = self._load_impl(p)
+            except ShardLoadError:
+                raise
+            except Exception as exc:
+                raise ShardLoadError(p, exc) from exc
+            sp.set(
+                from_cache=ls.from_cache,
+                from_resident=ls.from_resident,
+                load_ms=ls.load_s * 1e3,
+            )
+            return ls
+
+    def _load_impl(self, p: int) -> LoadedShard:
         t0 = time.perf_counter()
         delta = self.store.delta
         if delta is not None and delta.has_pending(p, self.pin):
@@ -157,10 +192,11 @@ class ShardPipeline:
                 self.cache.put(p, raw)
                 if self.store.shard_generation(p) != gen0:
                     self.cache.invalidate(p)  # raced with an overwrite
-        if self.fmt == "csr":
-            csr, ell = self.store.decode_csr(p, raw), None
-        else:
-            csr, ell = None, self.store.decode_ell(p, raw)
+        with trace.span("shard.decode", shard=p, fmt=self.fmt):
+            if self.fmt == "csr":
+                csr, ell = self.store.decode_csr(p, raw), None
+            else:
+                csr, ell = None, self.store.decode_ell(p, raw)
         if self.resident is not None:
             self.resident[p] = (csr, ell)
             if self.store.shard_generation(p) != gen0:
@@ -207,7 +243,10 @@ class ShardPipeline:
         for i in range(len(shard_ids)):
             fut = pending.pop(i)
             t0 = time.perf_counter()
-            ls = fut.result()  # re-raises loader exceptions on consumer
+            with trace.span("shard.wait", shard=shard_ids[i]):
+                # Re-raises loader failures on the consumer as
+                # ShardLoadError(shard_id) with the cause chained.
+                ls = fut.result()
             ls.wait_s = time.perf_counter() - t0
             top_up()  # keep the window full while we still hold the shard
             self._account(ls, stats)

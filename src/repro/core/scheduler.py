@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import trace
 from .bloom import BloomFilter
 from .cache import ShardCache
 from .sharding import GraphMeta
@@ -139,6 +140,16 @@ class ShardScheduler:
         optionally warm the cache (paper §IV-B: 'during the data loading
         phase, GraphMP scans all edges to construct Bloom filters, and
         places processed shards in the cache if possible')."""
+        with trace.span("bloom.build", shards=self.meta.num_shards):
+            self._build_filters_impl(store, warm_cache=warm_cache, cache_fmt=cache_fmt)
+
+    def _build_filters_impl(
+        self,
+        store: ShardStore,
+        *,
+        warm_cache: Optional[ShardCache],
+        cache_fmt: str,
+    ) -> None:
         io0 = store.io.snapshot()  # loading-phase I/O isn't per-iteration
         ps = list(range(self.meta.num_shards))
         filters: List[BloomFilter] = []
@@ -226,6 +237,21 @@ class ShardScheduler:
         individual lane is below the threshold too (each lane's active set
         is a subset of the union).
         """
+        with trace.span("sweep.plan") as sp:
+            out = self._plan_impl(active_ids, lane_active=lane_active)
+            sp.set(
+                shards=len(out.shards),
+                skipped=len(out.skipped),
+                selective=out.selective_on,
+            )
+            return out
+
+    def _plan_impl(
+        self,
+        active_ids: np.ndarray,
+        *,
+        lane_active: Optional[Sequence[np.ndarray]] = None,
+    ) -> ShardPlan:
         t0 = time.perf_counter()
         active_ratio = len(active_ids) / max(self.meta.num_vertices, 1)
         use_selective = (

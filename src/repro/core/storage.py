@@ -24,6 +24,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace
 from .csr import EllShard, csr_to_ell
 from .sharding import GraphMeta, ShardCSR
 
@@ -185,23 +186,26 @@ class ShardStore:
                 time.sleep(wait)
 
     def read_bytes(self, name: str) -> bytes:
-        with open(self._path(name), "rb") as f:
-            raw = f.read()
-        with self._io_lock:
-            self.io.bytes_read += len(raw)
-            self.io.reads += 1
-        self._throttle(len(raw))
+        with trace.span("store.read", key=name) as sp:
+            with open(self._path(name), "rb") as f:
+                raw = f.read()
+            sp.set(bytes=len(raw))
+            with self._io_lock:
+                self.io.bytes_read += len(raw)
+                self.io.reads += 1
+            self._throttle(len(raw))
         return raw
 
     def write_bytes(self, name: str, raw: bytes) -> None:
-        tmp = self._path(name) + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(raw)
-        os.replace(tmp, self._path(name))  # atomic: no torn shard files
-        with self._io_lock:
-            self.io.bytes_written += len(raw)
-            self.io.writes += 1
-        self._throttle(len(raw))
+        with trace.span("store.write", key=name, bytes=len(raw)):
+            tmp = self._path(name) + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(raw)
+            os.replace(tmp, self._path(name))  # atomic: no torn shard files
+            with self._io_lock:
+                self.io.bytes_written += len(raw)
+                self.io.writes += 1
+            self._throttle(len(raw))
 
     def exists(self, name: str) -> bool:
         return os.path.exists(self._path(name))

@@ -45,6 +45,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..obs import trace
 from .apps import VertexProgram
 from .cache import ShardCache
 from .executor import (
@@ -425,12 +426,15 @@ class VSWEngine:
         max_iters: int = 100,
         record_values_history: bool = False,
     ) -> RunResult:
-        with self._sweep_session():
-            return self._run_pinned(
-                program,
-                max_iters=max_iters,
-                record_values_history=record_values_history,
-            )
+        with trace.span(
+            "vsw.run", program=type(program).__name__, backend=self.backend_name
+        ):
+            with self._sweep_session():
+                return self._run_pinned(
+                    program,
+                    max_iters=max_iters,
+                    record_values_history=record_values_history,
+                )
 
     def _run_pinned(
         self,
@@ -457,19 +461,23 @@ class VSWEngine:
             pstats.reset()
             xstats.reset()
 
-            plan = self.scheduler.plan(active_ids)
-            msgs = program.pre(src_vals, meta.out_deg).astype(np.float32)
-            dst_vals = src_vals.copy()  # carried over for skipped shards
+            with trace.span("vsw.iter", iteration=it) as it_sp:
+                plan = self.scheduler.plan(active_ids)
+                msgs = program.pre(src_vals, meta.out_deg).astype(np.float32)
+                dst_vals = src_vals.copy()  # carried over for skipped shards
 
-            loaded = self.pipeline.iter_shards(plan.shards, stats=pstats)
-            for res in self.executor.run(loaded, msgs, program.combine, xstats):
-                new = program.apply(
-                    np.asarray(res.acc, dtype=src_vals.dtype),
-                    src_vals[res.v0: res.v1],
-                    meta,
-                    res.v0,
-                )
-                dst_vals[res.v0: res.v1] = new
+                loaded = self.pipeline.iter_shards(plan.shards, stats=pstats)
+                for res in self.executor.run(
+                    loaded, msgs, program.combine, xstats
+                ):
+                    new = program.apply(
+                        np.asarray(res.acc, dtype=src_vals.dtype),
+                        src_vals[res.v0: res.v1],
+                        meta,
+                        res.v0,
+                    )
+                    dst_vals[res.v0: res.v1] = new
+                it_sp.set(shards=plan.num_planned, skipped=plan.num_skipped)
 
             new_active = program.is_active(dst_vals, src_vals)
             active_ids = np.flatnonzero(new_active).astype(np.int64)

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core.csr import csr_to_ell
 from repro.core.ingest import csr_from_keys, keys_of_csr, kway_merge
+from repro.obs import trace
 from repro.core.storage import DELTA_MANIFEST, DELTA_RUN_PREFIX, _load_npz_bytes, _save_npz_bytes
 
 __all__ = ["DeltaRun", "DeltaOverlay", "apply_run", "tombstoned_mask",
@@ -304,29 +305,31 @@ class DeltaOverlay:
         cache slot never holds ambiguous bytes.
         """
         store = self.store
-        with self.shard_lock(p):
-            gen0 = store.shard_generation(p)
-            from_cache = False
-            raw = cache.get(p) if cache is not None else None
-            if raw is not None:
-                from_cache = True
-            else:
-                raw = store.shard_bytes(p, "csr")
-                if cache is not None:
-                    cache.put(p, raw)
-                    if store.shard_generation(p) != gen0:
-                        cache.invalidate(p)  # raced with a swap/overwrite
-            base = store.decode_csr(p, raw)
-            keys = self.logical_keys(p, pin, raw=raw)
-        csr = csr_from_keys(p, base.v0, base.v1, keys)
-        if fmt == "csr":
-            return csr, from_cache
-        ep = store.ell_params()
-        ell = csr_to_ell(
-            csr, self._num_v(),
-            window=ep["window"], k=ep["k"], tr=ep["tr"],
-        )
-        return ell, from_cache
+        with trace.span("overlay.merge", shard=p) as sp:
+            with self.shard_lock(p):
+                gen0 = store.shard_generation(p)
+                from_cache = False
+                raw = cache.get(p) if cache is not None else None
+                if raw is not None:
+                    from_cache = True
+                else:
+                    raw = store.shard_bytes(p, "csr")
+                    if cache is not None:
+                        cache.put(p, raw)
+                        if store.shard_generation(p) != gen0:
+                            cache.invalidate(p)  # raced with a swap/overwrite
+                base = store.decode_csr(p, raw)
+                sp.set(runs=len(self.pending_runs(p, pin)), from_cache=from_cache)
+                keys = self.logical_keys(p, pin, raw=raw)
+            csr = csr_from_keys(p, base.v0, base.v1, keys)
+            if fmt == "csr":
+                return csr, from_cache
+            ep = store.ell_params()
+            ell = csr_to_ell(
+                csr, self._num_v(),
+                window=ep["window"], k=ep["k"], tr=ep["tr"],
+            )
+            return ell, from_cache
 
     # --------------------------------------------------------- publication
     def commit_publish(

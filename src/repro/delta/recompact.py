@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.ingest import csr_from_keys, keys_of_csr
 from repro.delta.overlay import apply_run
+from repro.obs import trace
 
 __all__ = ["CompactionStats", "Recompactor"]
 
@@ -110,6 +111,12 @@ class Recompactor:
             return None
         if not overlay.wait_pins_below(s, stop=self._stop):
             return None
+        with trace.span("compact.shard", shard=p, version=s) as sp:
+            out = self._compact_locked(p, s, sp)
+        return out
+
+    def _compact_locked(self, p: int, s: int, sp) -> Optional[CompactionStats]:
+        store, overlay = self.store, self.overlay
         meta = store.read_meta()
         ep = store.ell_params()
         with overlay.shard_lock(p):
@@ -148,6 +155,7 @@ class Recompactor:
             tombstones_applied=n_tombs,
             shard_bytes_written=written,
         )
+        sp.set(runs=len(runs), inserts=n_ins, tombstones=n_tombs, bytes=written)
         with self._lock:
             self.total.merge(st)
         return st

@@ -1,0 +1,49 @@
+"""GraphScope: unified tracing + metrics for the VSW stack (DESIGN.md §11).
+
+Two pieces:
+
+- :mod:`repro.obs.trace` — structured tracer with nestable spans on
+  lock-free per-thread ring buffers, exporting Chrome-trace/Perfetto JSON.
+  Disabled (the default) it is a guard-flag no-op.
+- :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram instruments,
+  a :class:`MetricsRegistry` that absorbs the stack's nine stats
+  dataclasses, and one shared ``verify_conservation()``.
+"""
+
+from .metrics import (
+    ConservationError,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from .trace import (
+    NULL_SPAN,
+    Span,
+    Tracer,
+    active,
+    counter,
+    install,
+    instant,
+    span,
+    tracing,
+    uninstall,
+)
+
+__all__ = [
+    "ConservationError",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_SPAN",
+    "Span",
+    "Tracer",
+    "active",
+    "counter",
+    "install",
+    "instant",
+    "span",
+    "tracing",
+    "uninstall",
+]

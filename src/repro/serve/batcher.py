@@ -39,6 +39,7 @@ from __future__ import annotations
 from typing import Any, Callable, Deque, List
 
 from repro.core.csr import next_pow2
+from repro.obs import trace
 
 __all__ = ["pad_lanes", "LaneBatcher"]
 
@@ -130,12 +131,14 @@ class LaneBatcher:
     def form_fused(self, pending: Deque[Any]) -> List[List[Any]]:
         """The next fusion set: up to ``max_groups`` groups, each up to
         ``max_lanes`` requests sharing a combine algebra, oldest-first."""
-        groups: List[List[Any]] = []
-        while pending and len(groups) < self.max_groups:
-            g = self.take_fusable(
-                pending, self.group_key(pending[0]), self.max_lanes
-            )
-            if not g:  # pragma: no cover — take of the head never misses
-                break
-            groups.append(g)
-        return groups
+        with trace.span("batch.form") as sp:
+            groups: List[List[Any]] = []
+            while pending and len(groups) < self.max_groups:
+                g = self.take_fusable(
+                    pending, self.group_key(pending[0]), self.max_lanes
+                )
+                if not g:  # pragma: no cover — take of the head never misses
+                    break
+                groups.append(g)
+            sp.set(groups=len(groups), lanes=sum(len(g) for g in groups))
+            return groups

@@ -37,6 +37,8 @@ import numpy as np
 from repro.core.apps import LaneProgram, get_lane_program
 from repro.core.graph import Graph
 from repro.core.vsw import VSWEngine
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
 
 from .batcher import LaneBatcher
 from .session import SessionCache
@@ -59,13 +61,19 @@ class QueryResult:
     values: np.ndarray  # [n] final vertex values
     iterations: int
     converged: bool
-    latency_s: float  # submit -> future resolution
+    latency_s: float  # submit -> future resolution (queue wait + sweep)
     # Mask-aware cost shares: each planned shard's load (and the bytes
     # behind it) is split over only the lanes it was dispatched for, so a
     # query masked out of most of the stream is billed accordingly.
     bytes_read: float  # this query's share of sweep disk bytes
     shard_loads: float  # this query's share of shard fetches
     lanes: int  # lane capacity of the fusion GROUP that served it
+    # Tail-latency decomposition (GraphScope, DESIGN.md §11): time spent
+    # queued before a fusion set admitted the query, and time riding the
+    # sweep after admission.  ``latency_s == queue_wait_s + sweep_s`` for
+    # lane-served results; both are 0.0 for session-cache hits.
+    queue_wait_s: float = 0.0
+    sweep_s: float = 0.0
     cached: bool = False  # served from the session cache
     groups: int = 1  # program groups interleaved on the serving sweep
     # The graph version this result was computed at.  Every sweep runs
@@ -114,6 +122,7 @@ class _Pending:
     prog: LaneProgram
     future: "Future[QueryResult]"
     t_submit: float
+    t_admit: float = 0.0  # set when a fusion set takes the entry
 
     @property
     def key(self) -> Tuple:
@@ -159,6 +168,12 @@ class GraphService:
         self.max_pending = max_pending
         self.graph_version = graph_version
         self.lane_selective = lane_selective
+
+        # GraphScope instruments (DESIGN.md §11): latency histograms fed at
+        # retirement, sweep stats ingested after every fusion set so
+        # ``metrics_snapshot()`` can report tail latency + stage timings
+        # and ``metrics.verify_conservation()`` covers live sweeps.
+        self.metrics = MetricsRegistry()
 
         self._pending: Deque[_Pending] = deque()
         self._updates: Deque["_PendingUpdate"] = deque()
@@ -273,12 +288,17 @@ class GraphService:
             or c.iterations == max_iters,
         )
         if cached is not None:
+            latency = time.perf_counter() - t0
+            self.metrics.histogram("query.latency_s").record(latency)
+            trace.instant("service.cache_hit", program=program, source=source)
             fut.set_result(
                 dataclasses.replace(
                     cached,
                     request_id=next(self._ids),
                     values=cached.values.copy(),
-                    latency_s=time.perf_counter() - t0,
+                    latency_s=latency,
+                    queue_wait_s=0.0,
+                    sweep_s=0.0,
                     bytes_read=0.0,
                     shard_loads=0.0,
                     cached=True,
@@ -295,18 +315,19 @@ class GraphService:
             future=fut,
             t_submit=t0,
         )
-        with self._cond:
-            if self._closed:
-                raise RuntimeError("GraphService is closed")
-            if (
-                self.max_pending is not None
-                and len(self._pending) >= self.max_pending
-            ):
-                raise ServiceOverloaded(
-                    f"pending queue at admission cap ({self.max_pending})"
-                )
-            self._pending.append(entry)
-            self._cond.notify_all()
+        with trace.span("service.admit", program=program, source=source):
+            with self._cond:
+                if self._closed:
+                    raise RuntimeError("GraphService is closed")
+                if (
+                    self.max_pending is not None
+                    and len(self._pending) >= self.max_pending
+                ):
+                    raise ServiceOverloaded(
+                        f"pending queue at admission cap ({self.max_pending})"
+                    )
+                self._pending.append(entry)
+                self._cond.notify_all()
         return fut
 
     def query(
@@ -369,9 +390,10 @@ class GraphService:
 
             self._edge_log = EdgeLog(self.engine.store)
         try:
-            for u in updates:
-                self._edge_log.append(inserts=u.inserts, deletes=u.deletes)
-            pub = self._edge_log.publish()
+            with trace.span("service.publish", batches=len(updates)):
+                for u in updates:
+                    self._edge_log.append(inserts=u.inserts, deletes=u.deletes)
+                pub = self._edge_log.publish()
         except BaseException as exc:
             for u in updates:
                 if not u.future.done():
@@ -426,6 +448,9 @@ class GraphService:
         n_groups = len(groups)
         resolved: set = set()
         admitted: List[_Pending] = [p for g in groups for p in g]
+        t_admit0 = time.perf_counter()
+        for p in admitted:
+            p.t_admit = t_admit0
 
         # The whole sweep — including lanes backfilled mid-flight — runs at
         # this version: publishes only happen on this thread between sweeps.
@@ -436,6 +461,9 @@ class GraphService:
                 taken = self.batcher.take_fusable(
                     self._pending, group_keys[group], n_free
                 )
+            t_admit = time.perf_counter()
+            for p in taken:
+                p.t_admit = t_admit
             admitted.extend(taken)
             return [
                 LaneSeed(source=p.source, max_iters=p.max_iters, token=p,
@@ -445,32 +473,44 @@ class GraphService:
 
         def on_retire(res: LaneResult) -> None:
             p: _Pending = res.token
-            qr = QueryResult(
-                request_id=p.request_id,
-                program=p.program,
-                source=p.source,
-                values=res.values,
-                iterations=res.iterations,
-                converged=res.converged,
-                latency_s=time.perf_counter() - p.t_submit,
-                bytes_read=res.bytes_read,
-                shard_loads=res.shard_loads,
-                lanes=capacities[res.group],
-                graph_version=version,
-                groups=n_groups,
-            )
-            # Cache a private copy: the caller owns ``qr.values`` and may
-            # mutate it; later hits must still see the computed result.
-            self.sessions.put(
-                (p.prog.key, p.source, version),
-                dataclasses.replace(qr, values=res.values.copy()),
-            )
-            resolved.add(p.request_id)
-            with self._cond:
-                self._queries_done += 1
-                self._bytes_read += res.bytes_read
-                self._shard_loads += res.shard_loads
-            p.future.set_result(qr)
+            now = time.perf_counter()
+            with trace.span(
+                "service.retire", program=p.program, source=p.source,
+                group=res.group,
+            ):
+                qr = QueryResult(
+                    request_id=p.request_id,
+                    program=p.program,
+                    source=p.source,
+                    values=res.values,
+                    iterations=res.iterations,
+                    converged=res.converged,
+                    latency_s=now - p.t_submit,
+                    queue_wait_s=p.t_admit - p.t_submit,
+                    sweep_s=now - p.t_admit,
+                    bytes_read=res.bytes_read,
+                    shard_loads=res.shard_loads,
+                    lanes=capacities[res.group],
+                    graph_version=version,
+                    groups=n_groups,
+                )
+                self.metrics.histogram("query.latency_s").record(qr.latency_s)
+                self.metrics.histogram("query.queue_wait_s").record(
+                    qr.queue_wait_s
+                )
+                self.metrics.histogram("query.sweep_s").record(qr.sweep_s)
+                # Cache a private copy: the caller owns ``qr.values`` and may
+                # mutate it; later hits must still see the computed result.
+                self.sessions.put(
+                    (p.prog.key, p.source, version),
+                    dataclasses.replace(qr, values=res.values.copy()),
+                )
+                resolved.add(p.request_id)
+                with self._cond:
+                    self._queries_done += 1
+                    self._bytes_read += res.bytes_read
+                    self._shard_loads += res.shard_loads
+                p.future.set_result(qr)
 
         seed_groups = [
             [
@@ -487,12 +527,27 @@ class GraphService:
             lane_selective=self.lane_selective,
         )
         try:
-            sweep.run(seed_groups, backfill=backfill, on_retire=on_retire)
+            with trace.span(
+                "service.fusion_set",
+                groups=n_groups,
+                lanes=sum(len(g) for g in groups),
+            ):
+                sweep.run(seed_groups, backfill=backfill, on_retire=on_retire)
         except BaseException as exc:  # propagate to every unresolved caller
             for p in admitted:
                 if p.request_id not in resolved and not p.future.done():
                     p.future.set_exception(exc)
         finally:
+            # Absorb the sweep's per-iteration stats: conservation
+            # identities (incl. the mesh device splits) get declared per
+            # iteration and stage-timing histograms feed metrics_snapshot.
+            for st in sweep.iter_stats:
+                self.metrics.ingest(st)
+                self.metrics.histogram("stage.load_s").record(st.load_total_s)
+                self.metrics.histogram("stage.load_wait_s").record(
+                    st.load_wait_s
+                )
+                self.metrics.histogram("stage.exec_s").record(st.exec_s)
             with self._cond:
                 self._sweeps += 1
                 if n_groups > 1:
@@ -529,6 +584,34 @@ class GraphService:
         if self._recompactor is not None:
             out["shards_compacted"] = self._recompactor.total.shards_compacted
         return out
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Tail-latency + stage-timing snapshot (GraphScope, DESIGN.md §11).
+
+        Percentile blocks are log-bucket estimates (≲3.5% relative error):
+        per-query latency split into queue wait vs sweep time, per-sweep
+        stage timings (load / exposed load wait / dispatch), and the
+        outcome of replaying every conservation identity declared by the
+        sweeps ingested so far (empty list = all conserved).  The
+        benchmark harness writes the latency percentiles into consolidated
+        ``BENCH_graphmp.json`` rows.
+        """
+        h = self.metrics.histogram
+        return {
+            "query_latency_s": h("query.latency_s").percentiles(),
+            "queue_wait_s": h("query.queue_wait_s").percentiles(),
+            "sweep_s": h("query.sweep_s").percentiles(),
+            "stages": {
+                "iter_s": h("sweep.time_s").percentiles(),
+                "load_s": h("stage.load_s").percentiles(),
+                "load_wait_s": h("stage.load_wait_s").percentiles(),
+                "exec_s": h("stage.exec_s").percentiles(),
+            },
+            "conservation_violations": self.metrics.verify_conservation(
+                strict=False
+            ),
+            "service": self.stats(),
+        }
 
     def bump_graph_version(self) -> int:
         """Invalidate all cached results (graph changed underneath).

@@ -52,6 +52,7 @@ from repro.core.executor import ExecStats, MeshLaneExecutor, make_lane_executor
 from repro.core.pipeline import PipelineStats
 from repro.core.scheduler import ShardPlan
 from repro.core.vsw import VSWEngine
+from repro.obs import trace
 
 from .batcher import pad_lanes
 
@@ -107,6 +108,12 @@ class SweepIterStats:
     # lane-aware selective scheduling: dispatch rows (shard x lane pairs)
     # skipped because the lane had no active source in the shard
     lane_rows_skipped: int = 0
+    # per-stage decomposition (GraphScope, DESIGN.md §11): load work done
+    # by prefetch threads, the slice of it exposed on the critical path,
+    # and kernel dispatch time — the serving analogue of IterStats'.
+    load_total_s: float = 0.0
+    load_wait_s: float = 0.0
+    exec_s: float = 0.0
     # fusion: program groups live this iteration (1 for plain lane sweeps)
     groups: int = 1
     # mesh sweeps (DESIGN.md §10); empty tuples on single-device sweeps.
@@ -350,6 +357,13 @@ class FusedSweep:
 
         def emit(res: LaneResult) -> None:
             results.append(res)
+            trace.instant(
+                "lane.retire",
+                group=res.group,
+                source=res.source,
+                program=res.program,
+                iterations=res.iterations,
+            )
             if on_retire is not None:
                 on_retire(res)
 
@@ -384,115 +398,135 @@ class FusedSweep:
         # mid-query — every result is computed at exactly one graph version.
         with engine._sweep_session():
             while any(t.live.any() for t in tables):
-                t0 = time.perf_counter()
-                io0 = engine.store.io.snapshot()
-                pstats.reset()
-                xstats.reset()
+                with trace.span("sweep.iter", iteration=it) as it_sp:
+                    t0 = time.perf_counter()
+                    io0 = engine.store.io.snapshot()
+                    pstats.reset()
+                    xstats.reset()
 
-                group_live = [t.live_slots() for t in tables]
-                total_live = int(sum(len(sl) for sl in group_live))
-                n_groups_live = sum(1 for sl in group_live if len(sl))
-                union_any = np.zeros(n, dtype=bool)
-                for t, sl in zip(tables, group_live):
-                    if len(sl):
-                        union_any |= t.active[sl].any(axis=0)
-                union_ids = np.flatnonzero(union_any).astype(np.int64)
-                lane_active = None
-                if self.lane_selective and total_live > 1:
-                    lane_active = [
-                        np.flatnonzero(t.active[k]).astype(np.int64)
+                    group_live = [t.live_slots() for t in tables]
+                    total_live = int(sum(len(sl) for sl in group_live))
+                    n_groups_live = sum(1 for sl in group_live if len(sl))
+                    union_any = np.zeros(n, dtype=bool)
+                    for t, sl in zip(tables, group_live):
+                        if len(sl):
+                            union_any |= t.active[sl].any(axis=0)
+                    union_ids = np.flatnonzero(union_any).astype(np.int64)
+                    lane_active = None
+                    if self.lane_selective and total_live > 1:
+                        lane_active = [
+                            np.flatnonzero(t.active[k]).astype(np.int64)
+                            for t, sl in zip(tables, group_live)
+                            for k in sl
+                        ]
+                    plan = engine.scheduler.plan(
+                        union_ids, lane_active=lane_active
+                    )
+                    msgs = [
+                        t.messages(meta.out_deg) if len(sl) else None
                         for t, sl in zip(tables, group_live)
-                        for k in sl
                     ]
-                plan = engine.scheduler.plan(union_ids, lane_active=lane_active)
-                msgs = [
-                    t.messages(meta.out_deg) if len(sl) else None
-                    for t, sl in zip(tables, group_live)
-                ]
-                # carried over for skipped shards / masked lanes / dead rows
-                dst = [t.vals.copy() for t in tables]
+                    # carried for skipped shards / masked lanes / dead rows
+                    dst = [t.vals.copy() for t in tables]
 
-                loaded = engine.pipeline.iter_shards(plan.shards, stats=pstats)
-                rows_skipped = 0
-                if plan.lane_masks is None:
-                    groups_args = [
-                        (m, t.combine) if m is not None else None
-                        for m, t in zip(msgs, tables)
-                    ]
-                    for gi, res in self.executor.run_groups(
-                        loaded, groups_args, xstats
-                    ):
-                        sl = group_live[gi]
-                        acc = np.asarray(res.acc, dtype=np.float32)[sl]
-                        tables[gi].apply_rows(acc, sl, res.v0, res.v1, dst[gi])
-                else:
-                    rows_skipped = self._run_masked(
-                        plan, loaded, tables, group_live, msgs, dst, xstats
+                    loaded = engine.pipeline.iter_shards(
+                        plan.shards, stats=pstats
                     )
+                    rows_skipped = 0
+                    if plan.lane_masks is None:
+                        groups_args = [
+                            (m, t.combine) if m is not None else None
+                            for m, t in zip(msgs, tables)
+                        ]
+                        for gi, res in self.executor.run_groups(
+                            loaded, groups_args, xstats
+                        ):
+                            sl = group_live[gi]
+                            acc = np.asarray(res.acc, dtype=np.float32)[sl]
+                            tables[gi].apply_rows(
+                                acc, sl, res.v0, res.v1, dst[gi]
+                            )
+                    else:
+                        rows_skipped = self._run_masked(
+                            plan, loaded, tables, group_live, msgs, dst, xstats
+                        )
 
-                # ------------------------------------ commit + attribution
-                dio = engine.store.io - io0
-                shares = plan.lane_shares(total_live)
-                bytes_per_load = (
-                    dio.bytes_read / plan.num_planned if plan.num_planned
-                    else 0.0
-                )
-                offset = 0
-                for gi, (t, sl) in enumerate(zip(tables, group_live)):
-                    if not len(sl):
-                        continue
-                    t.attribute(shares[offset:offset + len(sl)], bytes_per_load)
-                    offset += len(sl)
-                    t.advance(dst[gi])
-
-                # ----------------------------------- retirement + backfill
-                retired = sum(t.retire(emit) for t in tables)
-                backfilled = 0
-                if backfill is not None:
-                    for t in tables:
-                        while True:
-                            n_free = t.free_count()
-                            if n_free == 0:
-                                break
-                            got = list(backfill(t.group, n_free))
-                            if not got:
-                                break
-                            for seed in got:
-                                res = t.admit(seed)
-                                if res is not None:
-                                    emit(res)  # zero-budget, slot stays free
-                                else:
-                                    backfilled += 1
-
-                dev_shards = dev_disp = dev_bytes = ()
-                if plan.device_shards is not None:
-                    dev_shards = tuple(len(g) for g in plan.device_shards)
-                    dev_bytes = tuple(
-                        len(g) * bytes_per_load for g in plan.device_shards
+                    # -------------------------------- commit + attribution
+                    dio = engine.store.io - io0
+                    shares = plan.lane_shares(total_live)
+                    bytes_per_load = (
+                        dio.bytes_read / plan.num_planned if plan.num_planned
+                        else 0.0
                     )
-                    dev_disp = tuple(
-                        xstats.device_dispatches.get(d, 0)
-                        for d in range(len(plan.device_shards))
-                    )
+                    offset = 0
+                    for gi, (t, sl) in enumerate(zip(tables, group_live)):
+                        if not len(sl):
+                            continue
+                        t.attribute(
+                            shares[offset:offset + len(sl)], bytes_per_load
+                        )
+                        offset += len(sl)
+                        t.advance(dst[gi])
 
-                self.iter_stats.append(
-                    SweepIterStats(
-                        iteration=it,
+                    # ------------------------------- retirement + backfill
+                    retired = sum(t.retire(emit) for t in tables)
+                    backfilled = 0
+                    if backfill is not None:
+                        for t in tables:
+                            while True:
+                                n_free = t.free_count()
+                                if n_free == 0:
+                                    break
+                                got = list(backfill(t.group, n_free))
+                                if not got:
+                                    break
+                                for seed in got:
+                                    res = t.admit(seed)
+                                    if res is not None:
+                                        emit(res)  # zero-budget, slot free
+                                    else:
+                                        backfilled += 1
+
+                    dev_shards = dev_disp = dev_bytes = ()
+                    if plan.device_shards is not None:
+                        dev_shards = tuple(len(g) for g in plan.device_shards)
+                        dev_bytes = tuple(
+                            len(g) * bytes_per_load
+                            for g in plan.device_shards
+                        )
+                        dev_disp = tuple(
+                            xstats.device_dispatches.get(d, 0)
+                            for d in range(len(plan.device_shards))
+                        )
+
+                    self.iter_stats.append(
+                        SweepIterStats(
+                            iteration=it,
+                            live_lanes=total_live,
+                            shards_processed=plan.num_planned,
+                            shards_skipped=plan.num_skipped,
+                            bytes_read=dio.bytes_read,
+                            selective_on=plan.selective_on,
+                            retired=retired,
+                            backfilled=backfilled,
+                            time_s=time.perf_counter() - t0,
+                            lane_rows_skipped=rows_skipped,
+                            load_total_s=pstats.load_total_s,
+                            load_wait_s=pstats.wait_s,
+                            exec_s=xstats.exec_s,
+                            groups=n_groups_live,
+                            device_shards=dev_shards,
+                            device_dispatches=dev_disp,
+                            device_bytes=dev_bytes,
+                        )
+                    )
+                    it_sp.set(
+                        shards=plan.num_planned,
                         live_lanes=total_live,
-                        shards_processed=plan.num_planned,
-                        shards_skipped=plan.num_skipped,
-                        bytes_read=dio.bytes_read,
-                        selective_on=plan.selective_on,
+                        groups=n_groups_live,
                         retired=retired,
                         backfilled=backfilled,
-                        time_s=time.perf_counter() - t0,
-                        lane_rows_skipped=rows_skipped,
-                        groups=n_groups_live,
-                        device_shards=dev_shards,
-                        device_dispatches=dev_disp,
-                        device_bytes=dev_bytes,
                     )
-                )
                 it += 1
         return results
 
