@@ -39,6 +39,12 @@ Mapping to the paper:
                      before and after background-style recompaction, with
                      the bitwise oracle (fresh preprocess of the mutated
                      edge list) asserted at every point.
+  fig_restart      — warm-restart checkpoints (repro/checkpoint/warm_state,
+                     DESIGN.md §12): cold GraphService boot (full filter-
+                     build read pass) vs warm-state restore (zero boot
+                     reads) under the emulate_bw throttle; warm boot
+                     asserted faster, repeat query asserted a session-cache
+                     hit, fresh queries asserted bitwise-equal.
   fig_obs          — GraphScope overhead guard (repro/obs, DESIGN.md §11):
                      disabled-tracer per-call cost in ns, multiplied by the
                      span-event count of an enabled run of the same config,
@@ -838,6 +844,99 @@ def fig_obs(rows: List[str], *, quick: bool = False) -> None:
             trace.install(prev)
 
 
+def fig_restart(rows: List[str], *, quick: bool = False) -> None:
+    """Cold boot vs warm-state restart (ISSUE 8, DESIGN.md §12).
+
+    A cold ``GraphService`` boot reads every shard once to build the
+    scheduler's Bloom/exact filters; a warm boot restores the source
+    arrays (and the session cache) from a :mod:`repro.checkpoint.
+    warm_state` snapshot and reads NOTHING.  Both boots run under the
+    ``emulate_bw`` throttle so the read cost is deterministic wall time,
+    and the warm boot is ASSERTED faster — plus zero boot reads, a
+    session-cache hit on the repeat query, and bitwise-equal values on a
+    never-cached query.
+    """
+    import os
+
+    from repro.serve import GraphService
+
+    if quick:
+        num_v, num_e, shards, bw = 10_000, 120_000, 8, 40e6
+    else:
+        num_v, num_e, shards, bw = 20_000, 500_000, 8, 40e6
+    g = rmat_graph(num_v, num_e, seed=12)
+    cb = 32 << 20
+
+    with tempfile.TemporaryDirectory() as d:
+        root = os.path.join(d, "store")
+        ckdir = os.path.join(d, "warm")
+        svc = GraphService.from_graph(
+            g, root, num_shards=shards, window=256, k=16, tr=8,
+            backend="numpy", cache_bytes=cb,
+        )
+        svc.apply_updates(
+            inserts=(np.array([1, 2, 3]), np.array([4, 5, 6]))
+        ).result()
+        repeat = svc.query("bfs", 0)  # the query a restarted service re-sees
+        svc.save_warm_state(ckdir)
+        svc.close()
+
+        t0 = time.perf_counter()
+        cold = GraphService.from_store(
+            root, emulate_bw=bw, backend="numpy", cache_bytes=cb
+        )
+        cold_wall = time.perf_counter() - t0
+        cold_io = cold.engine.loading_io
+        t0 = time.perf_counter()
+        cold_repeat = cold.query("bfs", 0)
+        cold_first_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        warm = GraphService.from_store(
+            root, warm_state=ckdir, emulate_bw=bw, backend="numpy",
+            cache_bytes=cb,
+        )
+        warm_wall = time.perf_counter() - t0
+        warm_io = warm.engine.loading_io
+        rep = warm.warm_restore_report
+        t0 = time.perf_counter()
+        warm_repeat = warm.query("bfs", 0)
+        warm_first_s = time.perf_counter() - t0
+
+        # the acceptance assertions: faster, read-free, bitwise, cache-hot
+        assert rep["valid"] and rep["shards_warm"] == shards, rep
+        assert warm_io.reads == 0 and warm_io.bytes_read == 0
+        assert warm_wall < cold_wall, (
+            f"warm boot {warm_wall:.3f}s not faster than cold {cold_wall:.3f}s"
+        )
+        assert warm_repeat.cached and not cold_repeat.cached
+        assert np.array_equal(warm_repeat.values, repeat.values)
+        assert np.array_equal(cold_repeat.values, repeat.values)
+        fresh_w = warm.query("sssp", 9)
+        fresh_c = cold.query("sssp", 9)
+        assert np.array_equal(fresh_w.values, fresh_c.values)
+
+        rows.append(
+            f"fig_restart_cold_boot,{cold_wall*1e6:.0f},"
+            f"boot_reads={cold_io.reads}"
+            f";boot_bytes={cold_io.bytes_read}"
+            f";first_query_us={cold_first_s*1e6:.0f}"
+        )
+        rows.append(
+            f"fig_restart_warm_boot,{warm_wall*1e6:.0f},"
+            f"boot_reads={warm_io.reads}"
+            f";boot_bytes={warm_io.bytes_read}"
+            f";first_query_us={warm_first_s*1e6:.0f}"
+            f";boot_speedup={cold_wall/max(warm_wall,1e-9):.2f}x"
+            f";shards_warm={rep['shards_warm']}"
+            f";sessions_restored={rep['sessions_restored']}"
+            f";first_answer_speedup="
+            f"{(cold_wall+cold_first_s)/max(warm_wall+warm_first_s,1e-9):.2f}x"
+        )
+        cold.close()
+        warm.close()
+
+
 SECTIONS = {
     "fig5_selective": lambda rows, quick: fig5_selective(rows),
     "fig8_10_engines": lambda rows, quick: fig8_10_engines(rows),
@@ -850,6 +949,7 @@ SECTIONS = {
     "fig_mesh": lambda rows, quick: fig_mesh(rows, quick=quick),
     "fig_delta": lambda rows, quick: fig_delta(rows, quick=quick),
     "fig_obs": lambda rows, quick: fig_obs(rows, quick=quick),
+    "fig_restart": lambda rows, quick: fig_restart(rows, quick=quick),
 }
 
 
@@ -871,6 +971,7 @@ def run(rows: List[str], *, quick: bool = False,
         fig_mesh(rows, quick=True)
         fig_delta(rows, quick=True)
         fig_obs(rows, quick=True)
+        fig_restart(rows, quick=True)
         return
     for name in SECTIONS:
         SECTIONS[name](rows, quick)

@@ -105,6 +105,12 @@ class ShardCache:
         with self._lock:
             return len(self._data)
 
+    def keys(self):
+        """Snapshot of cached shard ids in LRU -> MRU order (the warm set a
+        restart checkpoint records, ``repro.checkpoint.warm_state``)."""
+        with self._lock:
+            return list(self._data.keys())
+
     @property
     def stored_bytes(self) -> int:
         with self._lock:

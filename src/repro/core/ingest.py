@@ -444,8 +444,16 @@ def ingest_edge_file(
         if f.startswith("ingest_run_") and f.endswith(".bin"):
             os.remove(store._path(f))
             stats.orphan_runs_removed += 1
-        elif f.startswith("delta_run_") or f == "delta_manifest.json":
+        elif (
+            f.startswith(("delta_run_", "delta_journal_"))
+            or f == "delta_manifest.json"
+        ):
             os.remove(store._path(f))
+            stats.stale_delta_runs_removed += 1
+        elif f == "delta_stage" and os.path.isdir(store._path(f)):
+            import shutil
+
+            shutil.rmtree(store._path(f))
             stats.stale_delta_runs_removed += 1
     if getattr(store, "delta", None) is not None:
         store.delta = None  # state referred to the replaced graph

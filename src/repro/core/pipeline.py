@@ -239,18 +239,36 @@ class ShardPipeline:
                 pending[next_submit] = pool.submit(self._load, p)
                 next_submit += 1
 
-        top_up()
-        for i in range(len(shard_ids)):
-            fut = pending.pop(i)
-            t0 = time.perf_counter()
-            with trace.span("shard.wait", shard=shard_ids[i]):
-                # Re-raises loader failures on the consumer as
-                # ShardLoadError(shard_id) with the cause chained.
-                ls = fut.result()
-            ls.wait_s = time.perf_counter() - t0
-            top_up()  # keep the window full while we still hold the shard
-            self._account(ls, stats)
-            yield ls
+        try:
+            top_up()
+            for i in range(len(shard_ids)):
+                fut = pending.pop(i)
+                t0 = time.perf_counter()
+                with trace.span("shard.wait", shard=shard_ids[i]):
+                    # Re-raises loader failures on the consumer as
+                    # ShardLoadError(shard_id) with the cause chained.
+                    ls = fut.result()
+                ls.wait_s = time.perf_counter() - t0
+                top_up()  # keep the window full while we still hold the shard
+                self._account(ls, stats)
+                yield ls
+        finally:
+            # Abnormal exit (a ShardLoadError above, the consumer closing
+            # the generator after its own failure, GC of an abandoned
+            # iterator): DRAIN the prefetch window.  In-flight futures are
+            # cancelled if still queued and awaited if running, so the next
+            # sweep on this pipeline starts with idle prefetch threads and
+            # no stale loads completing mid-way through it.
+            if pending:
+                for fut in pending.values():
+                    fut.cancel()
+                for fut in pending.values():
+                    if not fut.cancelled():
+                        try:
+                            fut.result()
+                        except BaseException:
+                            pass  # the primary failure already surfaced
+                pending.clear()
 
     @staticmethod
     def _account(ls: LoadedShard, stats: Optional[PipelineStats]) -> None:

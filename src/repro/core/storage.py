@@ -34,6 +34,14 @@ __all__ = ["IOStats", "ShardStore"]
 #: sorted ``(dst<<32|src)`` insert keys plus unique tombstone keys.
 DELTA_RUN_PREFIX = "delta_run_"
 DELTA_MANIFEST = "delta_manifest.json"
+#: per-publish metadata journal (repro.delta.recovery): ABSOLUTE post-
+#: publish degree rows + edge count, written before the manifest commit so
+#: recovery can replay the metadata of a committed publish idempotently.
+DELTA_JOURNAL_PREFIX = "delta_journal_"
+#: staging directory for recompaction's staged-rename swap: new base
+#: containers land here first, the manifest flips, then each file is
+#: renamed into place (recovery finishes or discards, DESIGN.md §12).
+DELTA_STAGE_DIR = "delta_stage"
 
 
 @dataclasses.dataclass
@@ -127,8 +135,13 @@ class ShardStore:
         # (a store carrying unabsorbed mutations must boot with them).
         self.delta = None
         self._ell_params: Optional[Dict[str, int]] = None
-        if os.path.exists(os.path.join(root, DELTA_MANIFEST)) or any(
-            f.startswith(DELTA_RUN_PREFIX) for f in os.listdir(root)
+        if (
+            os.path.exists(os.path.join(root, DELTA_MANIFEST))
+            or os.path.isdir(os.path.join(root, DELTA_STAGE_DIR))
+            or any(
+                f.startswith((DELTA_RUN_PREFIX, DELTA_JOURNAL_PREFIX))
+                for f in os.listdir(root)
+            )
         ):
             self.ensure_delta()
 
@@ -320,6 +333,36 @@ class ShardStore:
     def shard_name(p: int, fmt: str = "csr") -> str:
         return f"shard_{p:05d}.{fmt}.npz"
 
+    def encode_shard(
+        self,
+        shard: ShardCSR,
+        *,
+        num_vertices: int,
+        window: int,
+        k: int,
+        tr: int,
+    ) -> Tuple[bytes, bytes, EllShard]:
+        """Encode one shard's CSR + derived ELL container bytes without
+        touching disk — shared by :meth:`write_shard` and recompaction's
+        staged-rename swap (which writes to the staging dir itself)."""
+        ell = csr_to_ell(shard, num_vertices, window=window, k=k, tr=tr)
+        csr_raw = _save_npz_bytes(
+            interval=np.array([shard.v0, shard.v1], dtype=np.int64),
+            row=shard.row,
+            col=shard.col,
+        )
+        ell_raw = _save_npz_bytes(
+            interval=np.array([shard.v0, shard.v1], dtype=np.int64),
+            ell_idx=ell.ell_idx,
+            mask_bits=np.packbits(ell.ell_mask, axis=None),
+            seg=ell.seg,
+            tile_window=ell.tile_window,
+            ell_meta=np.array(
+                [num_vertices, window, k, tr, ell.nnz, ell.n_ell], dtype=np.int64
+            ),
+        )
+        return csr_raw, ell_raw, ell
+
     def write_shard(
         self,
         shard: ShardCSR,
@@ -342,21 +385,8 @@ class ShardStore:
         overwrite = self.exists(self.shard_name(shard.shard_id, "csr")) or self.exists(
             self.shard_name(shard.shard_id, "ell")
         )
-        ell = csr_to_ell(shard, num_vertices, window=window, k=k, tr=tr)
-        csr_raw = _save_npz_bytes(
-            interval=np.array([shard.v0, shard.v1], dtype=np.int64),
-            row=shard.row,
-            col=shard.col,
-        )
-        ell_raw = _save_npz_bytes(
-            interval=np.array([shard.v0, shard.v1], dtype=np.int64),
-            ell_idx=ell.ell_idx,
-            mask_bits=np.packbits(ell.ell_mask, axis=None),
-            seg=ell.seg,
-            tile_window=ell.tile_window,
-            ell_meta=np.array(
-                [num_vertices, window, k, tr, ell.nnz, ell.n_ell], dtype=np.int64
-            ),
+        csr_raw, ell_raw, ell = self.encode_shard(
+            shard, num_vertices=num_vertices, window=window, k=k, tr=tr
         )
         self.write_bytes(self.shard_name(shard.shard_id, "csr"), csr_raw)
         self.write_bytes(self.shard_name(shard.shard_id, "ell"), ell_raw)

@@ -467,16 +467,23 @@ class VSWEngine:
                 dst_vals = src_vals.copy()  # carried over for skipped shards
 
                 loaded = self.pipeline.iter_shards(plan.shards, stats=pstats)
-                for res in self.executor.run(
-                    loaded, msgs, program.combine, xstats
-                ):
-                    new = program.apply(
-                        np.asarray(res.acc, dtype=src_vals.dtype),
-                        src_vals[res.v0: res.v1],
-                        meta,
-                        res.v0,
-                    )
-                    dst_vals[res.v0: res.v1] = new
+                try:
+                    for res in self.executor.run(
+                        loaded, msgs, program.combine, xstats
+                    ):
+                        new = program.apply(
+                            np.asarray(res.acc, dtype=src_vals.dtype),
+                            src_vals[res.v0: res.v1],
+                            meta,
+                            res.v0,
+                        )
+                        dst_vals[res.v0: res.v1] = new
+                finally:
+                    # Deterministic drain: on an executor/apply failure (or
+                    # a ShardLoadError mid-stream) the prefetch window is
+                    # cancelled+awaited NOW, not at GC — the next run() on
+                    # this engine must not race stale loads.
+                    loaded.close()
                 it_sp.set(shards=plan.num_planned, skipped=plan.num_skipped)
 
             new_active = program.is_active(dst_vals, src_vals)

@@ -28,6 +28,7 @@ triggers and version/snapshot semantics.
 from .edgelog import EdgeLog, PublishResult
 from .overlay import DeltaOverlay, DeltaRun, apply_run
 from .recompact import CompactionStats, Recompactor
+from .recovery import CRASH_POINTS, RecoveryReport, recover, set_crash_hook
 
 __all__ = [
     "EdgeLog",
@@ -37,4 +38,8 @@ __all__ = [
     "apply_run",
     "CompactionStats",
     "Recompactor",
+    "CRASH_POINTS",
+    "RecoveryReport",
+    "recover",
+    "set_crash_hook",
 ]

@@ -2,9 +2,12 @@
 
 Write side of GraphDelta (DESIGN.md §8).  Callers :meth:`append` batches of
 edge inserts/deletes; :meth:`publish` folds every staged batch into AT MOST
-one delta run per affected shard and commits them atomically (run files →
-updated vertex/property metadata → manifest), advancing the overlay
-version by one.
+one delta run per affected shard and commits them CRASH-atomically
+(DESIGN.md §12: run files → metadata journal → one-write manifest commit →
+metadata), advancing the overlay version by one.  A crash anywhere leaves
+either no trace of the publish or all of it — recovery replays the
+journaled metadata of a committed publish and scrubs the files of an
+uncommitted one.
 
 Batch semantics (the contract the bitwise tests enforce):
 
@@ -44,6 +47,7 @@ import numpy as np
 from repro.core.ingest import kway_merge, route_edges
 
 from .overlay import DeltaRun, run_name, tombstoned_mask
+from .recovery import crashpoint, encode_journal, journal_name
 
 __all__ = ["EdgeLog", "PublishResult"]
 
@@ -168,7 +172,9 @@ class EdgeLog:
         runs: List[DeltaRun] = []
         added_total = removed_total = run_bytes = 0
         empty = np.empty(0, dtype=np.int64)
+        vid_parts: List[np.ndarray] = []  # endpoints whose degrees change
         try:
+            first_run = True
             for p in touched:
                 tombs = tomb_acc.get(p, empty)
                 ins = ins_acc.get(p, empty)
@@ -182,35 +188,55 @@ class EdgeLog:
                     if len(arr):
                         np.add.at(meta.out_deg, arr & 0xFFFFFFFF, sign)
                         np.add.at(meta.in_deg, arr >> 32, sign)
+                        vid_parts.append(arr & 0xFFFFFFFF)
+                        vid_parts.append(arr >> 32)
                 added_total += len(ins)
                 removed_total += len(removed)
                 raw = DeltaRun.encode(ins, tombs)
                 name = run_name(p, seq)
                 store.write_bytes(name, raw)
+                if first_run:
+                    crashpoint("publish.first_run")
+                    first_run = False
                 run_bytes += len(raw)
                 run = DeltaRun(p, seq, name, nbytes=len(raw))
                 run.set_arrays(ins, tombs)
                 runs.append(run)
-        except BaseException:
-            # The manifest never advanced, so nothing became visible — but
-            # run files already written at ``seq`` must not linger: a LATER
-            # successful publish commits the same seq, and recovery would
-            # then legitimize these orphans as published runs.
-            for run in runs:
-                try:
-                    os.remove(store._path(run.name))
-                except OSError:
-                    pass
-            raise
+            crashpoint("publish.runs_written")
 
-        # Commit order: run files (above) -> metadata -> manifest.  The
-        # manifest is the commit record; a crash in between leaves a
-        # window where recovery discards the runs but keeps the already-
-        # written degree arrays (best-effort, documented in DESIGN.md §8 —
-        # closing it needs the metadata delta journaled in the manifest).
-        meta.num_edges += added_total - removed_total
-        store.write_meta(meta)
-        overlay.commit_publish(seq, runs, touched)
+            # Metadata journal (DESIGN.md §12): ABSOLUTE post-publish degree
+            # rows for every touched vertex + the new edge count, durable
+            # BEFORE the manifest commit.  Replay at recovery is idempotent,
+            # so a crash anywhere after the commit still converges to the
+            # published metadata.
+            meta.num_edges += added_total - removed_total
+            vids = (
+                np.unique(np.concatenate(vid_parts)).astype(np.int64)
+                if vid_parts else empty
+            )
+            journal = journal_name(seq)
+            store.write_bytes(journal, encode_journal(meta, vids, meta.num_edges))
+            crashpoint("publish.journal_written")
+
+            # One atomic manifest write commits the publish; metadata is
+            # applied AFTER it (stale-degree window closed), and only a
+            # committed publish bumps overlay.version.
+            overlay.commit_publish(seq, runs, touched, meta=meta, journal=journal)
+        except BaseException:
+            if overlay.version < seq:
+                # Not committed: nothing became visible, but files written
+                # at ``seq`` must not linger — a LATER successful publish
+                # commits the same seq, and recovery would then legitimize
+                # these orphans as published runs.  Scrub by NAME for every
+                # touched shard (not just registered DeltaRuns — a write
+                # that raised after landing its file never registered one)
+                # plus the journal.
+                for name in [run_name(p, seq) for p in touched] + [journal_name(seq)]:
+                    try:
+                        os.remove(store._path(name))
+                    except OSError:
+                        pass
+            raise
         return PublishResult(
             version=seq,
             batches=len(staged),

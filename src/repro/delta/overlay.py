@@ -32,9 +32,13 @@ a concurrent reader sees either (old base, runs ``<= S`` pending) or
 (new base, runs ``<= S`` absorbed), never half of each.
 
 Durability: run files live in the store (accounted channel) and
-``delta_manifest.json`` is the commit record — on open, runs above the
-manifest version (unpublished partial flush) or at/below a shard's floor
-(absorbed, cleanup interrupted) are deleted.
+``delta_manifest.json`` is the ONLY commit record — one atomic write flips
+a publish (version + metadata journal ref) or a compaction (floor + stage
+record) in its entirety.  On open, :func:`repro.delta.recovery.recover`
+rolls every interrupted protocol forward or back from the manifest alone:
+uncommitted runs/journals/staged files are deleted, a committed publish's
+metadata journal is replayed, a committed compaction's staged renames are
+finished.  See DESIGN.md §12 for the full state machine.
 """
 
 from __future__ import annotations
@@ -51,6 +55,9 @@ from repro.core.csr import csr_to_ell
 from repro.core.ingest import csr_from_keys, keys_of_csr, kway_merge
 from repro.obs import trace
 from repro.core.storage import DELTA_MANIFEST, DELTA_RUN_PREFIX, _load_npz_bytes, _save_npz_bytes
+
+from . import recovery as _recovery
+from .recovery import crashpoint
 
 __all__ = ["DeltaRun", "DeltaOverlay", "apply_run", "tombstoned_mask",
            "run_name"]
@@ -148,38 +155,50 @@ class DeltaOverlay:
         # active sweep pins: version -> refcount
         self._pins: Dict[int, int] = {}
         self._pin_cond = threading.Condition(self._lock)
+        # shards whose committed compaction is mid-swap: p -> absorbed seq.
+        # Recorded in the manifest so recovery can finish the staged
+        # renames; empty except inside commit_compaction..clear_stage.
+        self._stage: Dict[int, int] = {}
+        # Serializes the manifest PROTOCOL sections (publish commit,
+        # compaction flip) against each other — a background compaction's
+        # manifest write must never clobber a publish's journal-bearing
+        # manifest mid-protocol.  Ordering: shard_lock -> _commit_lock ->
+        # _lock; _lock is never held while taking either of the others.
+        self._commit_lock = threading.Lock()
         self._recover()
 
     # ------------------------------------------------------------ recovery
     def _recover(self) -> None:
-        store = self.store
-        if store.exists(DELTA_MANIFEST):
-            man = json.loads(store.read_bytes(DELTA_MANIFEST))
-            self.version = int(man.get("version", 0))
-            self._floor = {int(p): int(s) for p, s in man.get("floor", {}).items()}
-        for f in sorted(os.listdir(store.root)):
-            if not (f.startswith(DELTA_RUN_PREFIX) and f.endswith(".npz")):
-                continue
-            stem = f[len(DELTA_RUN_PREFIX):-4]
-            try:
-                p_s, seq_s = stem.split("_")
-                p, seq = int(p_s), int(seq_s)
-            except ValueError:
-                continue
-            if seq > self.version or seq <= self._floor.get(p, 0):
-                os.remove(store._path(f))  # unpublished / already absorbed
-                continue
-            run = DeltaRun(p, seq, f, nbytes=store.file_size(f))
-            self._runs.setdefault(p, []).append(run)
-            self._last_publish[p] = max(self._last_publish.get(p, 0), seq)
-        for runs in self._runs.values():
-            runs.sort(key=lambda r: r.seq)
+        """Delegate to the recovery state machine (repro.delta.recovery):
+        replays a committed publish's metadata journal, finishes a
+        committed compaction's staged renames, deletes uncommitted
+        runs/journals/staged files, and registers the surviving runs.
+        The report is kept on ``self.last_recovery`` — a clean open has
+        ``last_recovery.acted == False``."""
+        self.last_recovery = _recovery.recover(self)
 
-    def _write_manifest(self) -> None:
+    def _write_manifest(
+        self, *, version: Optional[int] = None, journal: Optional[int] = None
+    ) -> None:
+        """Write the commit record (atomic tmp+rename).  ``version``
+        overrides ``self.version`` (publish commits the new version on disk
+        BEFORE making it visible in memory); ``journal`` records a pending
+        metadata journal; any active stage records ride along — and the
+        written floor folds them in (a stage record MEANS "floor advanced
+        to s, renames pending"), while the in-memory floor stays behind
+        until :meth:`clear_stage` so live readers keep folding the pending
+        runs over the OLD base until the new one is actually in place."""
+        floor = dict(self._floor)
+        for p, s in self._stage.items():
+            floor[p] = max(floor.get(p, 0), s)
         man = {
-            "version": self.version,
-            "floor": {str(p): s for p, s in self._floor.items()},
+            "version": self.version if version is None else version,
+            "floor": {str(p): s for p, s in floor.items()},
         }
+        if self._stage:
+            man["stage"] = {str(p): s for p, s in self._stage.items()}
+        if journal is not None:
+            man["journal"] = journal
         self.store.write_bytes(DELTA_MANIFEST, json.dumps(man).encode())
 
     # ------------------------------------------------------------- queries
@@ -219,6 +238,19 @@ class DeltaOverlay:
             sum(r.n_tombs for r in runs),
             sum(r.nbytes for r in runs),
         )
+
+    def floors(self) -> Dict[int, int]:
+        """Snapshot of the per-shard absorbed-watermark map (shard ->
+        highest publish seq folded into its base)."""
+        with self._lock:
+            return dict(self._floor)
+
+    def last_publish_seq(self, p: int) -> int:
+        """Newest publish seq known to have touched shard ``p`` (0 = never;
+        absorbed runs forget this after a restart — combine with
+        :meth:`floors` for publish evidence across restarts)."""
+        with self._lock:
+            return self._last_publish.get(p, 0)
 
     def publishes_since(self, seen_version: int) -> List[int]:
         """Shards touched by any publish after ``seen_version`` (still
@@ -333,33 +365,106 @@ class DeltaOverlay:
 
     # --------------------------------------------------------- publication
     def commit_publish(
-        self, seq: int, runs: List[DeltaRun], touched: List[int]
+        self,
+        seq: int,
+        runs: List[DeltaRun],
+        touched: List[int],
+        *,
+        meta=None,
+        journal: Optional[str] = None,
     ) -> None:
-        """Make a published batch visible: register runs, advance the
-        version, write the manifest (the commit record), then invalidate
-        stale decoded/cached copies of the touched shards.  Base bytes are
-        unchanged by a publish, so warm base-source arrays survive."""
-        with self._lock:
-            for r in runs:
-                self._runs.setdefault(r.shard_id, []).append(r)
-                self._last_publish[r.shard_id] = seq
-            self.version = seq
-            self._write_manifest()
+        """Commit a published batch (crash-atomic, DESIGN.md §12).
+
+        The caller (``EdgeLog.publish``) has already written the run files
+        and the metadata journal ``journal`` (absolute post-publish degree
+        rows).  Protocol, under the commit lock:
+
+        1. manifest gains ``{"version": seq, "journal": seq}`` — THE commit
+           point.  A crash before this write loses the publish entirely
+           (recovery deletes the orphan files); a crash after it keeps the
+           publish entirely (recovery replays the journal).
+        2. updated metadata ``meta`` is written.  Only now — never before
+           the commit — so a crash can no longer leave degree arrays ahead
+           of discarded runs (the stale-degree window).
+        3. in-memory registration: runs + version become visible.  Deferred
+           to here so concurrent readers never see the new version while
+           the on-disk metadata still lags it; guaranteed (``finally``)
+           even if step 2 raised, because the commit already happened.
+        4. the journal ref is cleared from the manifest and the journal
+           file removed.
+
+        After the commit the method invalidates decoded/cached copies of
+        the touched shards.  Base bytes are unchanged by a publish, so warm
+        base-source arrays survive (``drop_warm=False``).
+
+        Raises only for pre-commit failures (the manifest write itself);
+        the caller distinguishes via ``overlay.version``: still below
+        ``seq`` means nothing committed and the files must be scrubbed.
+        """
+        with self._commit_lock:
+            self._write_manifest(
+                version=seq, journal=seq if journal is not None else None
+            )
+            # committed: everything below must leave a recoverable state
+            try:
+                crashpoint("publish.committed")
+                if meta is not None:
+                    self.store.write_meta(meta)
+                crashpoint("publish.meta_written")
+            finally:
+                with self._lock:
+                    for r in runs:
+                        self._runs.setdefault(r.shard_id, []).append(r)
+                        self._last_publish[r.shard_id] = seq
+                    self.version = seq
+            with self._lock:
+                self._write_manifest()
+            if journal is not None:
+                try:
+                    os.remove(self.store._path(journal))
+                except OSError:
+                    pass
         for p in touched:
             self.store.invalidate_shard(p, drop_warm=False)
 
-    def absorb(self, p: int, upto_seq: int, runs: List[DeltaRun]) -> None:
-        """Recompaction bookkeeping: runs ``<= upto_seq`` of shard ``p`` are
-        now IN the base shard.  Caller holds the shard lock and has already
-        rewritten the base."""
-        with self._lock:
-            self._floor[p] = max(self._floor.get(p, 0), upto_seq)
-            keep = [r for r in self._runs.get(p, ()) if r.seq > upto_seq]
-            if keep:
-                self._runs[p] = keep
-            else:
-                self._runs.pop(p, None)
-            self._write_manifest()
+    # --------------------------------------------------------- compaction
+    def commit_compaction(self, p: int, upto_seq: int) -> None:
+        """Atomically flip shard ``p`` to its staged base (DESIGN.md §12):
+        ONE manifest write advances the on-disk floor to ``upto_seq`` AND
+        records the stage, so recovery either sees neither (old base +
+        runs — the compaction never happened) or both (it finishes the
+        renames and drops the absorbed runs) — never a floor that advanced
+        without its new base, nor pending runs re-applied onto a base that
+        already absorbed them.
+
+        In-memory floor/run state is deliberately NOT touched here: until
+        the renames land (:meth:`clear_stage`), live readers must keep
+        seeing the shard as dirty, so their decodes take the overlay path
+        and serialize on the shard lock the compactor holds — a clean-path
+        reader checks ``has_pending`` WITHOUT that lock and would otherwise
+        read the old base with the runs already dropped.  Caller holds the
+        shard lock and has written the staged containers."""
+        with self._commit_lock:
+            with self._lock:
+                self._stage[p] = upto_seq
+                self._write_manifest()  # folds the stage into the floor
+
+    def clear_stage(self, p: int, upto_seq: int, runs: List[DeltaRun]) -> None:
+        """Staged containers are renamed into place: make the absorption
+        visible in memory (floor advance + run pruning), drop the stage
+        record, then remove the absorbed run files.  Run-file deletion is
+        safe last — recovery deletes runs at or below the manifest floor
+        itself."""
+        with self._commit_lock:
+            with self._lock:
+                self._floor[p] = max(self._floor.get(p, 0), upto_seq)
+                keep = [r for r in self._runs.get(p, ()) if r.seq > upto_seq]
+                if keep:
+                    self._runs[p] = keep
+                else:
+                    self._runs.pop(p, None)
+                self._stage.pop(p, None)
+                self._write_manifest()
         for r in runs:
             try:
                 os.remove(self.store._path(r.name))

@@ -15,10 +15,19 @@ filter without another read.
 Safety against live sweeps: absorbing runs ``<= S`` changes which state the
 BASE bytes represent, so compaction (a) waits until no sweep is pinned
 below ``S`` (:meth:`DeltaOverlay.wait_pins_below`) and (b) performs the
-swap — base rewrite + floor advance + run removal — under the same
-per-shard lock the overlay decode takes.  A concurrent reader pinned at
-``v >= S`` therefore sees either (old base, runs ``<= S`` pending) or
-(new base, runs ``(S, v]`` pending); both decode to the same logical shard.
+swap — staged base write + manifest flip + renames + run removal — under
+the same per-shard lock the overlay decode takes.  A concurrent reader
+pinned at ``v >= S`` therefore sees either (old base, runs ``<= S``
+pending) or (new base, runs ``(S, v]`` pending); both decode to the same
+logical shard.
+
+Safety against crashes (DESIGN.md §12): the new base containers are staged
+under ``delta_stage/`` and ONE atomic manifest write flips the shard —
+floor advance and stage record land together — before any base file is
+replaced.  A crash before the flip discards the stage (old base + runs
+intact); a crash after it has recovery finish the renames and delete the
+absorbed runs.  The old two-file overwrite could crash between the base
+rewrite and the floor advance, double-applying the runs on reopen.
 
 Triggers (``should_compact``): pending run count >= ``min_runs`` OR pending
 delta bytes >= ``min_delta_frac`` of the base container.  ``compact()``
@@ -29,13 +38,16 @@ thread, the LSM-style maintenance loop a serving deployment wants.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.ingest import csr_from_keys, keys_of_csr
+from repro.core.storage import DELTA_STAGE_DIR
 from repro.delta.overlay import apply_run
+from repro.delta.recovery import crashpoint, stage_rel_name
 from repro.obs import trace
 
 __all__ = ["CompactionStats", "Recompactor"]
@@ -78,7 +90,11 @@ class Recompactor:
         self.total = CompactionStats()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # guards ``total`` merges
+        # Lifecycle lock: start/stop may race (e.g. concurrent
+        # GraphService.close calls); the maintenance thread itself never
+        # takes it, so joining under it cannot deadlock.
+        self._lifecycle_lock = threading.Lock()
 
     # ------------------------------------------------------------- policy
     def should_compact(self, p: int) -> bool:
@@ -135,19 +151,33 @@ class Recompactor:
             v0, v1 = meta.interval_of(p)
             shard = csr_from_keys(p, v0, v1, keys)
             del keys
-            # the swap: new base lands (invalidation hooks fire inside),
-            # THEN the floor advances and the absorbed runs disappear —
-            # all under this shard's overlay lock
-            store.write_shard(
+            # the swap (staged-rename protocol, DESIGN.md §12): encode the
+            # new base into the staging dir, flip the manifest — floor
+            # advance + stage record in ONE atomic write — then rename each
+            # container into place and clean up; all under this shard's
+            # overlay lock, so readers see old-base+runs or new-base, never
+            # half of each, and a crash at any point recovers cleanly.
+            csr_raw, ell_raw, _ = store.encode_shard(
                 shard,
                 num_vertices=meta.num_vertices,
                 window=ep["window"], k=ep["k"], tr=ep["tr"],
             )
+            csr_name = store.shard_name(p, "csr")
+            ell_name = store.shard_name(p, "ell")
+            os.makedirs(store._path(DELTA_STAGE_DIR), exist_ok=True)
+            store.write_bytes(stage_rel_name(csr_name), csr_raw)
+            store.write_bytes(stage_rel_name(ell_name), ell_raw)
+            crashpoint("compact.staged")
+            overlay.commit_compaction(p, s)  # COMMIT: the manifest flip
+            crashpoint("compact.flipped")
+            os.replace(store._path(stage_rel_name(csr_name)), store._path(csr_name))
+            crashpoint("compact.csr_renamed")
+            os.replace(store._path(stage_rel_name(ell_name)), store._path(ell_name))
+            crashpoint("compact.renamed")
+            store.invalidate_shard(p)  # hooks fire; warm state re-deposited
             store.set_warm_sources(p, np.unique(shard.col).astype(np.int64))
-            overlay.absorb(p, s, runs)
-        written = store.file_size(store.shard_name(p, "csr")) + store.file_size(
-            store.shard_name(p, "ell")
-        )
+            overlay.clear_stage(p, s, runs)
+        written = len(csr_raw) + len(ell_raw)
         st = CompactionStats(
             shards_compacted=1,
             runs_absorbed=len(runs),
@@ -175,29 +205,36 @@ class Recompactor:
     # ---------------------------------------------------------- background
     def start(self) -> None:
         """Run the trigger policy on a background maintenance thread."""
-        if self._thread is not None:
-            return
-        self._stop.clear()
+        with self._lifecycle_lock:
+            if self._thread is not None:
+                return
+            self._stop.clear()
 
-        def loop() -> None:
-            while not self._stop.wait(self.interval_s):
-                try:
-                    self.compact()
-                except Exception:  # maintenance must not kill the host
-                    if self._stop.is_set():
-                        return
-                    raise
+            def loop() -> None:
+                while not self._stop.wait(self.interval_s):
+                    try:
+                        self.compact()
+                    except Exception:  # maintenance must not kill the host
+                        if self._stop.is_set():
+                            return
+                        raise
 
-        self._thread = threading.Thread(
-            target=loop, name="graphdelta-recompact", daemon=True
-        )
-        self._thread.start()
+            self._thread = threading.Thread(
+                target=loop, name="graphdelta-recompact", daemon=True
+            )
+            self._thread.start()
 
     def stop(self) -> None:
+        """Signal the maintenance thread and JOIN it — including any
+        compaction it is mid-way through.  Idempotent and thread-safe:
+        every concurrent caller blocks until the thread has fully exited
+        (the old unguarded ``self._thread = None`` let a second closer
+        return while a compaction still held shard locks)."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lifecycle_lock:
+            if self._thread is not None:
+                self._thread.join()
+                self._thread = None
 
     def __enter__(self) -> "Recompactor":
         self.start()

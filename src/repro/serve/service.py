@@ -26,6 +26,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import itertools
+import os
 import threading
 import time
 from collections import deque
@@ -168,6 +169,9 @@ class GraphService:
         self.max_pending = max_pending
         self.graph_version = graph_version
         self.lane_selective = lane_selective
+        # Set by ``from_store(warm_state=...)``: the apply_warm_state
+        # report (None = no warm restore was attempted).
+        self.warm_restore_report: Optional[Dict[str, Any]] = None
 
         # GraphScope instruments (DESIGN.md §11): latency histograms fed at
         # retirement, sweep stats ingested after every fusion set so
@@ -181,6 +185,11 @@ class GraphService:
         self._cond = threading.Condition()
         self._closed = False
         self._engine_closed = False
+        # Serializes the close body: concurrent/repeated close() calls must
+        # each return only after the worker AND any in-flight background
+        # compaction have fully stopped (never release the engine while a
+        # compaction still holds shard locks).
+        self._close_lock = threading.Lock()
         self._ids = itertools.count()
         # aggregate counters (worker-thread writes, snapshot under the lock)
         self._queries_done = 0
@@ -242,11 +251,48 @@ class GraphService:
         return cls(VSWEngine.from_graph(graph, root, **kwargs), **service_kw)
 
     @classmethod
-    def from_store(cls, root: str, **kwargs) -> "GraphService":
+    def from_store(
+        cls, root: str, *, warm_state=None, prewarm_cache: bool = False,
+        **kwargs,
+    ) -> "GraphService":
         """Serve from an already-populated store directory (e.g. built by
-        ``ShardStore.ingest``) without ever holding a ``Graph`` object."""
+        ``ShardStore.ingest``) without ever holding a ``Graph`` object.
+
+        ``warm_state`` (DESIGN.md §12) restores a warm-restart checkpoint:
+        pass a :class:`repro.checkpoint.warm_state.WarmState` or a
+        checkpoint directory (the latest snapshot is loaded).  Still-valid
+        per-shard source arrays are deposited before the engine builds its
+        filters — those shards are not read at boot — and, when the store's
+        graph content is unchanged since the snapshot, the session cache is
+        repopulated so repeat queries hit immediately.  The store on disk
+        is ALWAYS authoritative: a stale or mismatched snapshot degrades to
+        a cold boot (see ``warm_restore_report`` on the returned service),
+        never to wrong answers.  ``prewarm_cache=True`` additionally
+        re-reads the snapshot's byte-cache warm set into the new engine's
+        cache (boot I/O traded for first-query hits).
+        """
         service_kw = cls._split(kwargs)
-        return cls(VSWEngine.from_store(root, **kwargs), **service_kw)
+        if warm_state is None:
+            svc = cls(VSWEngine.from_store(root, **kwargs), **service_kw)
+            svc.warm_restore_report = None
+            return svc
+        from repro.checkpoint import warm_state as _ws
+        from repro.core.storage import ShardStore
+
+        ws = warm_state
+        if isinstance(ws, (str, os.PathLike)):
+            ws = _ws.WarmStateCheckpointer(str(ws)).restore()
+        store = ShardStore(root, emulate_bw=kwargs.pop("emulate_bw", None))
+        report = _ws.apply_warm_state(store, ws)
+        engine = VSWEngine(store, **kwargs)
+        if prewarm_cache:
+            report["cache_prewarmed"] = _ws.prewarm_cache(engine, ws)
+        if report["valid"]:
+            service_kw.setdefault("graph_version", ws.graph_version)
+        svc = cls(engine, **service_kw)
+        report["sessions_restored"] = svc._restore_warm_sessions(ws, report)
+        svc.warm_restore_report = report
+        return svc
 
     @classmethod
     def from_edge_file(cls, path: str, root: str, **kwargs) -> "GraphService":
@@ -632,24 +678,76 @@ class GraphService:
         rc = self._recompactor or Recompactor(self.engine.store)
         return rc.compact(rc.dirty_shards())
 
+    # ---------------------------------------------------------- warm state
+    def save_warm_state(
+        self, directory: str, *, step: Optional[int] = None, keep: int = 2
+    ) -> str:
+        """Snapshot this service's warm state (Bloom sources, byte-cache
+        warm set, delta coordinates, session-cache results) into an atomic
+        on-disk checkpoint (DESIGN.md §12).  Safe while serving; restore
+        with ``GraphService.from_store(root, warm_state=directory)``.
+        Returns the committed snapshot directory."""
+        from repro.checkpoint.warm_state import (
+            WarmStateCheckpointer,
+            capture_warm_state,
+        )
+
+        state = capture_warm_state(self)
+        return WarmStateCheckpointer(directory, keep=keep).save(
+            state, step=step
+        )
+
+    def _restore_warm_sessions(self, ws, report) -> int:
+        """Repopulate the session cache from a snapshot whose graph content
+        provably matches the store (``report["sessions_valid"]``)."""
+        if not report.get("valid") or not report.get("sessions_valid"):
+            return 0
+        n = 0
+        for e in ws.sessions:
+            qr = QueryResult(
+                request_id=-1,
+                program=e.program,
+                source=e.source,
+                values=np.asarray(e.values),
+                iterations=e.iterations,
+                converged=e.converged,
+                latency_s=0.0,
+                bytes_read=0.0,
+                shard_loads=0.0,
+                lanes=0,
+                cached=True,
+                graph_version=self.graph_version,
+            )
+            self.sessions.put(
+                (tuple(e.key), int(e.source), self.graph_version), qr
+            )
+            n += 1
+        return n
+
     # ----------------------------------------------------------- lifecycle
     def close(self, *, close_engine: bool = True) -> None:
         """Drain the queue, stop the worker, release the engine.
 
-        Idempotent — safe to call repeatedly and after ``__exit__``.
+        Idempotent AND thread-safe — safe to call repeatedly, concurrently,
+        and after ``__exit__``.  Every caller returns only once the serve
+        worker has exited and any in-flight background compaction has been
+        JOINED: the recompactor holds per-shard overlay locks mid-swap, so
+        releasing the engine before it finishes (the old unguarded path,
+        where a second closer could race the ``self._recompactor = None``
+        hand-off) could tear down state a compaction was still using.
         """
         with self._cond:
-            already = self._closed
             self._closed = True
             self._cond.notify_all()
-        if not already and self._worker.is_alive():
-            self._worker.join()  # drains queued queries AND staged updates
-        if self._recompactor is not None:
-            self._recompactor.stop()
-            self._recompactor = None
-        if close_engine and not self._engine_closed:
-            self._engine_closed = True
-            self.engine.close()
+        with self._close_lock:
+            if self._worker.is_alive():
+                self._worker.join()  # drains queued queries AND staged updates
+            rc, self._recompactor = self._recompactor, None
+            if rc is not None:
+                rc.stop()  # joins the maintenance thread mid-compaction too
+            if close_engine and not self._engine_closed:
+                self._engine_closed = True
+                self.engine.close()
 
     def __enter__(self) -> "GraphService":
         return self

@@ -80,6 +80,13 @@ class SessionCache:
                 del self._items[k]
             return len(stale)
 
+    def entries(self):
+        """Snapshot of (key, value) pairs in LRU -> MRU order — the warm-
+        state checkpoint (``repro.checkpoint.warm_state``) persists these
+        so a restarted service answers repeat queries from cache again."""
+        with self._lock:
+            return list(self._items.items())
+
     def clear(self) -> None:
         with self._lock:
             self._items.clear()

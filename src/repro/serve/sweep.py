@@ -433,23 +433,31 @@ class FusedSweep:
                         plan.shards, stats=pstats
                     )
                     rows_skipped = 0
-                    if plan.lane_masks is None:
-                        groups_args = [
-                            (m, t.combine) if m is not None else None
-                            for m, t in zip(msgs, tables)
-                        ]
-                        for gi, res in self.executor.run_groups(
-                            loaded, groups_args, xstats
-                        ):
-                            sl = group_live[gi]
-                            acc = np.asarray(res.acc, dtype=np.float32)[sl]
-                            tables[gi].apply_rows(
-                                acc, sl, res.v0, res.v1, dst[gi]
+                    try:
+                        if plan.lane_masks is None:
+                            groups_args = [
+                                (m, t.combine) if m is not None else None
+                                for m, t in zip(msgs, tables)
+                            ]
+                            for gi, res in self.executor.run_groups(
+                                loaded, groups_args, xstats
+                            ):
+                                sl = group_live[gi]
+                                acc = np.asarray(res.acc, dtype=np.float32)[sl]
+                                tables[gi].apply_rows(
+                                    acc, sl, res.v0, res.v1, dst[gi]
+                                )
+                        else:
+                            rows_skipped = self._run_masked(
+                                plan, loaded, tables, group_live, msgs, dst,
+                                xstats,
                             )
-                    else:
-                        rows_skipped = self._run_masked(
-                            plan, loaded, tables, group_live, msgs, dst, xstats
-                        )
+                    finally:
+                        # Deterministic drain on failure (ShardLoadError or
+                        # executor error): cancel+await the prefetch window
+                        # now, so the NEXT sweep on this engine sees idle
+                        # loader threads and no stale queue entries.
+                        loaded.close()
 
                     # -------------------------------- commit + attribution
                     dio = engine.store.io - io0

@@ -1,0 +1,68 @@
+"""Subprocess driver for the crash-recovery matrix (test_crash_recovery.py).
+
+Runs a fixed, fully deterministic mutation script against a pre-built store
+and SIGKILLs ITSELF at one named injection point (``repro.delta.recovery.
+CRASH_POINTS``) — a real crash, not an exception: no ``finally`` blocks, no
+atexit, the files are exactly what the protocol had made durable at that
+point.  The parent test imports this module for the SAME scenario
+definitions, so it can compute the per-version oracles the recovered store
+must match bitwise.
+
+Usage:  python tests/crash_driver.py <store_root> <crash_point|none>
+"""
+
+import os
+import signal
+import sys
+
+import numpy as np
+
+N_VERTICES = 300
+N_EDGES = 2500
+N_SHARDS = 4
+SEED = 7
+
+
+def base_graph():
+    from repro.core.graph import uniform_graph
+
+    return uniform_graph(N_VERTICES, N_EDGES, seed=SEED)
+
+
+def batches(g):
+    """Two deterministic mutation batches (inserts + deletes of existing
+    edges), each published separately: versions 1 and 2."""
+    rng = np.random.default_rng(42)
+    out = []
+    for _ in range(2):
+        i_src = rng.integers(0, N_VERTICES, 30)
+        i_dst = rng.integers(0, N_VERTICES, 30)
+        take = rng.choice(g.num_edges, 10, replace=False)
+        out.append(((i_src, i_dst), (g.src[take], g.dst[take])))
+    return out
+
+
+def main(root: str, point: str) -> int:
+    from repro.core.storage import ShardStore
+    from repro.delta import EdgeLog, Recompactor, set_crash_hook
+
+    if point != "none":
+
+        def hook(name: str) -> None:
+            if name == point:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+        set_crash_hook(hook)
+
+    store = ShardStore(root)
+    g = base_graph()
+    log = EdgeLog(store)
+    for ins, dels in batches(g):
+        log.append(inserts=ins, deletes=dels)
+        log.publish()
+    Recompactor(store, min_runs=1).compact()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -1,4 +1,5 @@
-"""Run the ingestion + delta + fusion tests under a hard AS cap (CI).
+"""Run the ingestion + delta + crash-recovery + fusion tests under a hard
+AS cap (CI).
 
 The streamed ingestion pipeline promises O(chunk + one shard) peak memory,
 the delta subsystem promises O(affected shard + pending runs) per
@@ -48,6 +49,8 @@ def main() -> int:
             "-q",
             os.path.join(here, "test_ingest.py"),
             os.path.join(here, "test_delta.py"),
+            os.path.join(here, "test_crash_recovery.py"),
+            os.path.join(here, "test_warm_state.py"),
             os.path.join(here, "test_fusion.py"),
             os.path.join(here, "test_mesh_sweep.py"),
             "-k",

@@ -1,0 +1,164 @@
+"""Kill-during-commit crash-recovery matrix (DESIGN.md §12).
+
+For every named injection point in ``repro.delta.recovery.CRASH_POINTS``, a
+subprocess (tests/crash_driver.py) runs a deterministic publish/publish/
+compact script against a copy of a pristine store and SIGKILLs itself at
+that point.  The parent then reopens the store — recovery runs inside
+``DeltaOverlay.__init__`` — and asserts:
+
+- the recovered store is BITWISE one of the per-version oracles (a
+  from-scratch build of the edge list at version 0, 1 or 2 — never a mix,
+  never a double-apply, never degrees ahead of edges),
+- which oracle is determined by the protocol: a crash before a commit
+  point recovers to the pre-operation version, after it to the committed
+  one,
+- no protocol debris survives recovery (orphan runs, journals, staged
+  containers, stage/journal manifest records),
+- recovery is idempotent (a second reopen acts on nothing), and
+- the recovered store is USABLE: finishing the interrupted script from
+  the recovered version converges to the same final state as a run that
+  never crashed.
+
+Kept SIGKILL-real on purpose: exception-based "crash" tests leave
+``finally`` blocks running and miss exactly the windows this matrix is
+for.
+"""
+
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import crash_driver
+from test_delta import WINDOW, K, TR, _apply_batch_oracle, _assert_logical_equal
+
+from repro.core.graph import Graph
+from repro.core.sharding import preprocess
+from repro.core.storage import (
+    DELTA_JOURNAL_PREFIX,
+    DELTA_RUN_PREFIX,
+    DELTA_STAGE_DIR,
+    ShardStore,
+)
+from repro.delta import CRASH_POINTS, EdgeLog, Recompactor
+
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+)
+
+#: Protocol contract: the version a store killed at each point must
+#: recover to.  Points strictly before a COMMIT roll back; points at or
+#: after it roll forward.  (Publish points fire during the first publish;
+#: compact points fire after both publishes committed.)
+EXPECTED_VERSION = {
+    "publish.first_run": 0,
+    "publish.runs_written": 0,
+    "publish.journal_written": 0,
+    "publish.committed": 1,
+    "publish.meta_written": 1,
+    "compact.staged": 2,
+    "compact.flipped": 2,
+    "compact.csr_renamed": 2,
+    "compact.renamed": 2,
+    "none": 2,
+}
+
+
+@pytest.fixture(scope="module")
+def pristine(tmp_path_factory):
+    """One pristine store + the per-version oracle graphs, built once."""
+    tmp = tmp_path_factory.mktemp("crash")
+    root = os.path.join(str(tmp), "pristine")
+    g = crash_driver.base_graph()
+    meta, shards = preprocess(g, num_shards=crash_driver.N_SHARDS)
+    store = ShardStore(root)
+    store.write_meta(meta, ell_params={"window": WINDOW, "k": K, "tr": TR})
+    for s in shards:
+        store.write_shard(s, num_vertices=meta.num_vertices,
+                          window=WINDOW, k=K, tr=TR)
+    oracles = [g]
+    src, dst = g.src, g.dst
+    for ins, dels in crash_driver.batches(g):
+        src, dst = _apply_batch_oracle(src, dst, ((ins), (dels)))
+        oracles.append(Graph(crash_driver.N_VERTICES, src, dst))
+    return root, meta, oracles
+
+
+def _run_driver(root: str, point: str) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [_SRC, env.get("PYTHONPATH")])
+    )
+    driver = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "crash_driver.py")
+    proc = subprocess.run(
+        [sys.executable, driver, root, point],
+        env=env, capture_output=True, text=True, timeout=120,
+    )
+    if proc.returncode not in (0, -9):
+        raise AssertionError(
+            f"driver died unexpectedly ({proc.returncode}):\n{proc.stderr}"
+        )
+    return proc.returncode
+
+
+def _assert_no_debris(root: str) -> None:
+    files = os.listdir(root)
+    assert not any(f.startswith(DELTA_JOURNAL_PREFIX) for f in files), files
+    stage = os.path.join(root, DELTA_STAGE_DIR)
+    assert not (os.path.isdir(stage) and os.listdir(stage))
+
+
+def _assert_runs_consistent(store: ShardStore) -> None:
+    """Every run file on disk is registered, published, and unabsorbed."""
+    overlay = store.delta
+    version = overlay.version if overlay else 0
+    floors = overlay.floors() if overlay else {}
+    for f in os.listdir(store.root):
+        if not f.startswith(DELTA_RUN_PREFIX):
+            continue
+        p, seq = (int(x) for x in f[len(DELTA_RUN_PREFIX):-4].split("_"))
+        assert seq <= version, f"orphan run past version: {f}"
+        assert seq > floors.get(p, 0), f"absorbed run survived: {f}"
+
+
+@pytest.mark.parametrize("point", list(CRASH_POINTS) + ["none"])
+def test_kill_matrix_recovers_bitwise(pristine, tmp_path, point):
+    root0, meta, oracles = pristine
+    root = os.path.join(str(tmp_path), "store")
+    shutil.copytree(root0, root)
+
+    rc = _run_driver(root, point)
+    assert (rc == 0) == (point == "none"), f"{point}: returncode {rc}"
+
+    # reopen: DeltaOverlay.__init__ runs recovery before anything reads
+    store = ShardStore(root)
+    version = store.delta.version if store.delta is not None else 0
+    assert version == EXPECTED_VERSION[point], point
+    _assert_logical_equal(store, meta, oracles[version])
+    _assert_no_debris(root)
+    _assert_runs_consistent(store)
+
+    # recovery is idempotent: a fresh open of the recovered store (its
+    # DeltaOverlay runs the state machine again) acts on nothing and sees
+    # the same state
+    store2 = ShardStore(root)
+    if store2.delta is not None:
+        assert not store2.delta.last_recovery.acted
+    _assert_logical_equal(store2, meta, oracles[version])
+
+    # the recovered store is usable: finish the interrupted script and the
+    # final state must equal the never-crashed run's
+    log = EdgeLog(store2)
+    g = crash_driver.base_graph()
+    for ins, dels in crash_driver.batches(g)[version:]:
+        log.append(inserts=ins, deletes=dels)
+        log.publish()
+    Recompactor(store2, min_runs=1).compact()
+    _assert_logical_equal(store2, meta, oracles[-1])
+    assert not store2.delta.dirty_shards()
+    _assert_no_debris(root)

@@ -727,3 +727,96 @@ def test_service_from_dirty_store_boot_e2e(tmp_path):
     assert np.array_equal(qr.values, ref.values)
     ref_eng.close()
     svc.close()
+
+
+# --------------------------------------------------------------------------
+# Crash windows (ISSUE 8): failed-publish cleanup + journaled metadata
+# --------------------------------------------------------------------------
+
+
+def _fail_nth_delta_write(store, nth):
+    """Make the ``nth`` delta-file write (run/journal, by prefix) raise —
+    the raise-after-first-run-file window the old cleanup path leaked in."""
+    orig = store.write_bytes
+    seen = {"n": 0}
+
+    def failing(name, data):
+        if name.startswith("delta_run_") or name.startswith("delta_journal_"):
+            seen["n"] += 1
+            if seen["n"] == nth:
+                raise OSError(f"injected failure at delta write #{nth}")
+        return orig(name, data)
+
+    store.write_bytes = failing
+    return lambda: setattr(store, "write_bytes", orig)
+
+
+@pytest.mark.parametrize("fail_at", ["second_run", "journal"])
+def test_failed_publish_scrubs_every_partial_file(tmp_path, fail_at):
+    """An aborted publish must leave NO delta files behind — a later
+    successful publish reuses the same seq, and recovery would legitimize
+    leftover orphans as published runs (phantom edges)."""
+    g = rmat_graph(200, 3000, seed=3)
+    store, meta = _mk_store(str(tmp_path), g, 4)
+    log = EdgeLog(store)
+    rng = np.random.default_rng(5)
+    # wide batch: touches several shards, so run files exist pre-raise
+    ins = (rng.integers(0, 200, 60), rng.integers(0, 200, 60))
+    log.append(inserts=ins)
+    touched = len({np.searchsorted(meta.intervals[1:], d, side="right")
+                   for d in ins[1]})
+    assert touched >= 2  # the scenario needs a partial-run window
+    nth = 2 if fail_at == "second_run" else touched + 1  # journal write
+    restore = _fail_nth_delta_write(store, nth)
+    with pytest.raises(OSError, match="injected"):
+        log.publish()
+    restore()
+
+    assert store.delta.version == 0
+    leftovers = [f for f in os.listdir(store.root)
+                 if f.startswith(("delta_run_", "delta_journal_"))]
+    assert not leftovers, leftovers
+    disk = store.read_meta()  # metadata untouched by the failed publish
+    assert disk.num_edges == g.num_edges
+
+    # the SAME seq is reused by the retry — it must commit cleanly and the
+    # store must be bitwise the oracle (no phantom copies from orphans)
+    log.append(inserts=ins)
+    pub = log.publish()
+    assert pub.version == 1
+    src, dst = _apply_batch_oracle(g.src, g.dst, (ins, None))
+    _assert_logical_equal(store, meta, Graph(200, src, dst))
+
+
+def test_publish_meta_write_failure_recovers_on_reopen(tmp_path):
+    """A publish whose COMMIT landed but whose metadata write failed is a
+    durable publish: the version advances, and the next open replays the
+    metadata journal — degrees/edge count converge to the published state
+    instead of staying stale (the old stale-degree window)."""
+    g = rmat_graph(150, 2000, seed=11)
+    store, meta = _mk_store(str(tmp_path), g, 4)
+    log = EdgeLog(store)
+    ins = (np.array([1, 2, 3, 7]), np.array([4, 5, 6, 9]))
+    log.append(inserts=ins)
+    orig = store.write_meta
+
+    def failing_meta(m, **kw):
+        raise OSError("injected metadata write failure")
+
+    store.write_meta = failing_meta
+    with pytest.raises(OSError, match="injected"):
+        log.publish()
+    store.write_meta = orig
+
+    # committed: the publish is visible despite the metadata failure
+    assert store.delta.version == 1
+    assert store.delta.pending_runs != {}
+
+    # reopen: recovery replays the journal onto the metadata
+    store2 = ShardStore(store.root)
+    assert store2.delta.last_recovery.journal_replayed
+    src, dst = _apply_batch_oracle(g.src, g.dst, (ins, None))
+    _assert_logical_equal(store2, meta, Graph(150, src, dst))
+    # and a second open is clean
+    store3 = ShardStore(store.root)
+    assert not store3.delta.last_recovery.acted

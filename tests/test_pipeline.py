@@ -299,3 +299,42 @@ def test_pad_ell_non_pow2_tile_rows(tmp_path):
         oracle = update_shard_numpy(s, None, msgs, "sum")
         got = update_shard_jnp(s, ell, msgs, "sum")
         assert np.allclose(got, oracle, rtol=1e-5, atol=1e-9)
+
+
+# ----------------- satellite: prefetch window drains after a failed sweep
+def test_failed_sweep_drains_prefetch_next_sweep_clean(tmp_path):
+    """After a ShardLoadError surfaces from a prefetch thread, the
+    pipeline's in-flight window is drained — the NEXT sweep on the SAME
+    engine must neither hang nor consume stale queue entries, and its
+    values are bitwise a fresh engine's."""
+    from repro.core.pipeline import ShardLoadError
+
+    g = rmat_graph(500, 6000, seed=21)
+    eng = _mk_engine(tmp_path, "drain", graph=g, prefetch_depth=2,
+                     selective=False)
+    ref = _mk_engine(tmp_path, "drainref", graph=g, prefetch_depth=0,
+                     selective=False)
+    orig = eng.store.shard_bytes
+    failing = {"on": True}
+
+    def flaky(p, fmt="csr"):
+        if failing["on"] and p == 3:
+            raise OSError(f"transient disk hole at shard {p}")
+        return orig(p, fmt)
+
+    eng.store.shard_bytes = flaky
+    eng.pipeline.cache = None  # every load goes through the store
+    with pytest.raises(ShardLoadError) as ei:
+        eng.run(apps.bfs(0), max_iters=4)
+    assert ei.value.shard_id == 3
+
+    # two consecutive recovery sweeps: the first would absorb any stale
+    # prefetch completions if the window had NOT been drained
+    failing["on"] = False
+    for _ in range(2):
+        got = eng.run(apps.bfs(0), max_iters=50)
+        want = ref.run(apps.bfs(0), max_iters=50)
+        assert got.converged == want.converged
+        assert np.array_equal(got.values, want.values)
+    eng.close()
+    ref.close()

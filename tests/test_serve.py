@@ -8,6 +8,7 @@ the service must survive concurrent submission.
 
 import tempfile
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -347,3 +348,52 @@ def test_shard_load_amortization(tmp_path):
         loads[k] = svc.stats()["loads_per_query"]
         svc.close()
     assert loads[1] >= 4 * loads[8]  # acceptance floor (exact ratio: 8x)
+
+
+# ------------------- satellite: close() joins in-flight background compaction
+def test_close_joins_inflight_compaction(tmp_path):
+    """close() must not release the engine while a background compaction
+    still holds shard locks: it blocks until the recompactor's maintenance
+    thread — including a compaction it is mid-way through — has fully
+    exited.  Concurrent closers all observe the same guarantee."""
+    from repro.delta.recovery import set_crash_hook
+
+    g = rmat_graph(300, 4000, seed=33)
+    svc = _mk_service(tmp_path, "closecomp", g, backend="numpy",
+                      num_shards=4, auto_compact_runs=1)
+    entered, release = threading.Event(), threading.Event()
+
+    def hook(name):
+        if name == "compact.staged":
+            entered.set()
+            release.wait(10)  # hold the compaction mid-swap
+
+    set_crash_hook(hook)
+    try:
+        svc.apply_updates(inserts=(np.arange(20) % 300,
+                                   (np.arange(20) * 7) % 300)).result()
+        assert entered.wait(10), "background compaction never started"
+
+        done = [threading.Event() for _ in range(2)]
+
+        def closer(ev):
+            svc.close()
+            ev.set()
+
+        threads = [threading.Thread(target=closer, args=(ev,)) for ev in done]
+        for t in threads:
+            t.start()
+        time.sleep(0.2)
+        # the compaction is parked inside the hook -> no closer may return
+        assert not any(ev.is_set() for ev in done)
+        release.set()
+        for t in threads:
+            t.join(10)
+        assert all(ev.is_set() for ev in done)
+    finally:
+        set_crash_hook(None)
+        release.set()
+        svc.close()
+    # the held compaction ran to completion before close returned
+    assert svc.engine.store.delta.dirty_shards() == []
+    assert svc._recompactor is None

@@ -1,0 +1,229 @@
+"""Warm-restart checkpoint tests (DESIGN.md §12).
+
+The contract: a warm boot is a pure TIME optimisation — the store on disk
+is always authoritative, and every query served by a warm-booted service
+is bitwise what a cold-booted one returns.  The snapshot may be stale,
+partially stale, corrupt, or describe a different store entirely; the
+worst legal outcome is a cold boot.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.warm_state import (
+    WarmStateCheckpointer,
+    apply_warm_state,
+    capture_warm_state,
+)
+from repro.core.graph import rmat_graph
+from repro.core.storage import ShardStore
+from repro.serve import GraphService
+
+N, M, SHARDS = 400, 5000, 4
+
+
+def _mk_service(tmp_path, tag, g=None, **kw):
+    g = g if g is not None else rmat_graph(N, M, seed=9)
+    kw.setdefault("num_shards", SHARDS)
+    kw.setdefault("window", 128)
+    kw.setdefault("k", 16)
+    return GraphService.from_graph(g, str(tmp_path / tag), **kw)
+
+
+# ------------------------------------------------------------ checkpointer
+def test_checkpointer_roundtrip_retention_and_integrity(tmp_path):
+    svc = _mk_service(tmp_path, "ck", cache_bytes=1 << 20)
+    svc.query("bfs", 3)
+    ws = capture_warm_state(svc)
+    ck = WarmStateCheckpointer(str(tmp_path / "warm"), keep=2)
+    for _ in range(3):  # retention: only ``keep`` newest survive
+        ck.save(ws)
+    assert ck.steps() == [1, 2]
+    got = ck.restore()
+    assert got.store_version == ws.store_version
+    assert got.graph_version == ws.graph_version
+    assert np.array_equal(got.intervals, ws.intervals)
+    assert got.floors == ws.floors
+    assert got.shard_sizes == ws.shard_sizes
+    assert got.cache_shards == ws.cache_shards
+    assert set(got.bloom_sources) == set(ws.bloom_sources)
+    for p in ws.bloom_sources:
+        assert np.array_equal(got.bloom_sources[p], ws.bloom_sources[p])
+    assert len(got.sessions) == len(ws.sessions)
+    for a, b in zip(got.sessions, ws.sessions):
+        assert (a.program, a.key, a.source) == (b.program, b.key, b.source)
+        assert np.array_equal(a.values, b.values)
+    svc.close()
+
+    # integrity: a flipped byte in the payload is detected, not trusted
+    step_dir = ck._dir(2)
+    with open(os.path.join(step_dir, "state.npz"), "r+b") as f:
+        f.seek(10)
+        byte = f.read(1)
+        f.seek(10)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="corrupt"):
+        ck.restore(2)
+
+
+def test_restore_empty_directory_raises(tmp_path):
+    ck = WarmStateCheckpointer(str(tmp_path / "none"))
+    assert ck.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        ck.restore()
+
+
+# -------------------------------------------------------------- warm boot
+def test_warm_boot_skips_reads_and_is_bitwise_cold(tmp_path):
+    g = rmat_graph(N, M, seed=9)
+    svc = _mk_service(tmp_path, "wb", g, cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.apply_updates(inserts=(np.array([1, 2]), np.array([3, 4]))).result()
+    r_bfs = svc.query("bfs", 5)
+    ckdir = svc.save_warm_state(str(tmp_path / "warm"))
+    svc.close()
+
+    warm = GraphService.from_store(root, warm_state=str(tmp_path / "warm"),
+                                   cache_bytes=1 << 20)
+    rep = warm.warm_restore_report
+    assert rep["valid"] and rep["shards_warm"] == SHARDS
+    assert rep["sessions_valid"] and rep["sessions_restored"] >= 1
+    # the whole point: filter build read NOTHING at boot
+    assert warm.engine.loading_io.reads == 0
+    assert warm.engine.loading_io.bytes_read == 0
+    assert os.path.basename(ckdir).startswith("warm_")
+
+    cold = GraphService.from_store(root, cache_bytes=1 << 20)
+    assert cold.engine.loading_io.reads > 0
+
+    # session-cache restoration: the repeat query hits without a sweep
+    hit = warm.query("bfs", 5)
+    assert hit.cached
+    assert np.array_equal(hit.values, r_bfs.values)
+    # fresh queries (never cached) are bitwise the cold service's
+    for prog, src in (("bfs", 17), ("sssp", 23), ("ppr", 3)):
+        a = warm.query(prog, src)
+        b = cold.query(prog, src)
+        assert np.array_equal(a.values, b.values), (prog, src)
+    warm.close()
+    cold.close()
+
+
+def test_warm_boot_accepts_warmstate_object_and_prewarms_cache(tmp_path):
+    svc = _mk_service(tmp_path, "obj", cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.query("bfs", 1)  # populate the byte cache via a sweep
+    ws = capture_warm_state(svc)
+    assert ws.cache_shards  # the sweep left shards cached
+    svc.close()
+
+    warm = GraphService.from_store(root, warm_state=ws, cache_bytes=1 << 20,
+                                   prewarm_cache=True)
+    rep = warm.warm_restore_report
+    assert rep["cache_prewarmed"] == len(ws.cache_shards)
+    assert set(warm.engine.cache.keys()) == set(ws.cache_shards)
+    warm.close()
+
+
+# ------------------------------------------------------------- staleness
+def test_publish_after_snapshot_invalidates_touched_shards_only(tmp_path):
+    svc = _mk_service(tmp_path, "stale", cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.query("bfs", 2)
+    svc.save_warm_state(str(tmp_path / "warm"))
+    # mutate AFTER the snapshot: one narrow insert (touches 1 shard)
+    svc.apply_updates(inserts=(np.array([0]), np.array([1]))).result()
+    svc.close()
+
+    warm = GraphService.from_store(root, warm_state=str(tmp_path / "warm"))
+    rep = warm.warm_restore_report
+    assert rep["valid"]
+    assert rep["shards_stale"] >= 1  # the published shard was rejected
+    assert rep["shards_warm"] == SHARDS - rep["shards_stale"]
+    assert not rep["sessions_valid"]  # content changed: no cached results
+    assert rep["sessions_restored"] == 0
+
+    cold = GraphService.from_store(root)
+    a = warm.query("bfs", 2)
+    b = cold.query("bfs", 2)
+    assert not a.cached  # the stale session entry was NOT restored
+    assert np.array_equal(a.values, b.values)
+    warm.close()
+    cold.close()
+
+
+def test_compaction_after_snapshot_keeps_sources_valid(tmp_path):
+    """Compaction rewrites bytes, not logical content: a snapshot taken
+    BEFORE runs were absorbed is still fully valid afterwards — floors
+    advanced only to publishes the snapshot already saw."""
+    svc = _mk_service(tmp_path, "comp", cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.apply_updates(inserts=(np.array([5, 6]), np.array([7, 8]))).result()
+    r = svc.query("bfs", 5)
+    svc.save_warm_state(str(tmp_path / "warm"))
+    svc.compact()  # absorbs runs <= snapshot version
+    svc.close()
+
+    warm = GraphService.from_store(root, warm_state=str(tmp_path / "warm"))
+    rep = warm.warm_restore_report
+    assert rep["valid"] and rep["shards_stale"] == 0
+    assert rep["sessions_valid"]
+    hit = warm.query("bfs", 5)
+    assert hit.cached and np.array_equal(hit.values, r.values)
+    warm.close()
+
+
+def test_reingested_store_rejects_snapshot_entirely(tmp_path):
+    g1 = rmat_graph(N, M, seed=9)
+    g2 = rmat_graph(N, M, seed=10)  # same frame, different edges
+    svc = _mk_service(tmp_path, "re", g1, cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.save_warm_state(str(tmp_path / "warm"))
+    svc.close()
+
+    # rebuild the store in place with DIFFERENT edges (same shard count —
+    # only the byte sizes betray the re-ingest)
+    from repro.core.sharding import preprocess
+
+    meta, shards = preprocess(g2, num_shards=SHARDS)
+    store = ShardStore(root)
+    store.write_meta(meta, ell_params=store.ell_params())
+    for s in shards:
+        ep = store.ell_params()
+        store.write_shard(s, num_vertices=meta.num_vertices,
+                          window=ep["window"], k=ep["k"], tr=ep["tr"])
+    ws = WarmStateCheckpointer(str(tmp_path / "warm")).restore()
+    rep = apply_warm_state(store, ws)
+    assert not rep["valid"]
+    assert rep["shards_warm"] == 0
+
+    # a service booted with the rejected snapshot degrades to cold — and
+    # answers from the NEW graph
+    warm = GraphService.from_store(root, warm_state=ws)
+    assert not warm.warm_restore_report["valid"]
+    cold = GraphService.from_store(root)
+    assert np.array_equal(warm.query("bfs", 4).values,
+                          cold.query("bfs", 4).values)
+    warm.close()
+    cold.close()
+
+
+def test_wiped_delta_history_rejects_snapshot(tmp_path):
+    """A snapshot taken at version > 0 against a store whose delta history
+    was wiped (version rolled back) is rejected wholesale."""
+    svc = _mk_service(tmp_path, "wipe", cache_bytes=1 << 20)
+    root = svc.engine.store.root
+    svc.apply_updates(inserts=(np.array([1]), np.array([2]))).result()
+    svc.compact()
+    svc.save_warm_state(str(tmp_path / "warm"))
+    svc.close()
+
+    # wipe the delta manifest: the store recovers to version 0
+    os.remove(os.path.join(root, "delta_manifest.json"))
+    store = ShardStore(root)
+    ws = WarmStateCheckpointer(str(tmp_path / "warm")).restore()
+    rep = apply_warm_state(store, ws)
+    assert not rep["valid"] and "behind snapshot" in rep["reason"]
+    assert rep["shards_warm"] == 0 and not rep["sessions_valid"]
