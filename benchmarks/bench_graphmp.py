@@ -50,6 +50,13 @@ Mapping to the paper:
                      span-event count of an enabled run of the same config,
                      must estimate to < 5 % of the untraced sweep time; the
                      direct traced/untraced wall ratio is reported alongside.
+  fig_qps          — GraphPulse load harness + SLO gates (repro/serve/
+                     loadgen + repro/obs, DESIGN.md §13): closed- and
+                     open-loop replay of a seeded mixed workload with a
+                     live mutation stream; sustained vs offered QPS,
+                     exact p50/p99 with the queue-wait split, per-version
+                     bitwise oracle replay, a violation-free SLO monitor,
+                     and round-tripped Prometheus/JSONL exports.
 
 Standalone usage (CI smoke mode)::
 
@@ -77,7 +84,7 @@ from repro.core.baselines.engines import (
     DSWEngine, ESGEngine, PSWEngine, prepare_baseline_store,
 )
 from repro.core.baselines.io_model import IOParams, MODELS, io_table
-from repro.core.graph import rmat_graph, small_world_graph
+from repro.core.graph import from_edge_list, rmat_graph, small_world_graph
 from repro.core.vsw import VSWEngine
 from repro.obs import Tracer, trace
 
@@ -937,6 +944,160 @@ def fig_restart(rows: List[str], *, quick: bool = False) -> None:
         warm.close()
 
 
+def fig_qps(rows: List[str], *, quick: bool = False) -> None:
+    """GraphPulse closed-loop load harness + SLO gates (DESIGN.md §13).
+
+    A seeded mixed BFS/SSSP/WCC/PPR workload with a concurrent mutation
+    stream replays against a live ``GraphService`` in both load-gen
+    modes, with the telemetry ticker and an SLO monitor running:
+
+    - closed loop (fixed concurrency, ``submit_batch`` chunks) reports
+      sustained QPS plus exact p50/p99 with the queue-wait vs sweep
+      split;
+    - open loop (arrival-scheduled at a target QPS) reports offered vs
+      achieved rate — queueing delay measured, not hidden;
+    - every completed query is replayed on a solo oracle engine built at
+      exactly its ``graph_version`` and asserted ``np.array_equal``;
+    - the SLO monitor (generous objectives a healthy run cannot breach)
+      is asserted violation-free — the no-false-positives gate;
+    - the Prometheus and JSONL exports are parsed back, proving the
+      telemetry is machine-readable end to end.
+    """
+    import os
+
+    from repro.obs import (
+        error_rate_slo,
+        latency_slo,
+        parse_prometheus,
+        prometheus_text,
+        read_jsonl,
+        share_slo,
+        write_jsonl,
+    )
+    from repro.serve import (
+        GraphService,
+        LoadGenerator,
+        QueryClass,
+        Workload,
+        edge_state_at_version,
+        oracle_kwargs,
+    )
+
+    if quick:
+        g = rmat_graph(5_000, 80_000, seed=13)
+        shards, total_ops, warmup, iters = 6, 48, 8, 4
+        concurrency, target_qps = 4, 120.0
+    else:
+        g = _mk_graph(seed=13)
+        shards, total_ops, warmup, iters = SHARDS, 160, 24, 6
+        concurrency, target_qps = 8, 60.0
+    wl = Workload(
+        classes=(
+            QueryClass("bfs", weight=2.0, max_iters=iters),
+            QueryClass("sssp", weight=1.0, max_iters=iters),
+            QueryClass("wcc", weight=1.0, max_iters=iters),
+            QueryClass("ppr", weight=1.0, max_iters=iters,
+                       params={"damping": 0.85}),
+        ),
+        seed=29,
+        update_every=total_ops // 3,
+        update_batch=16,
+    )
+    slos = [
+        latency_slo("latency_p99", threshold_s=30.0, budget=0.01),
+        error_rate_slo("admission_errors", budget=0.05),
+        share_slo("queue_wait_share", budget=0.95),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        with GraphService.from_graph(
+            g, os.path.join(d, "store"), num_shards=shards,
+            backend="numpy", max_lanes=16, session_entries=0,
+        ) as svc:
+            svc.start_telemetry(interval_s=0.1, slos=slos)
+            rep_c = LoadGenerator(
+                svc, wl, mode="closed", concurrency=concurrency,
+                batch_size=4, total_ops=total_ops, warmup_ops=warmup,
+            ).run()
+            rep_o = LoadGenerator(
+                svc, wl, mode="open", target_qps=target_qps, poisson=True,
+                total_ops=total_ops // 2, warmup_ops=warmup // 2,
+            ).run()
+            snap = svc.metrics_snapshot()
+            win = svc.metrics_snapshot(window=True)
+            prom = prometheus_text(svc.metrics)
+            prom_samples = parse_prometheus(prom)
+            ts = svc.stop_telemetry()
+            jsonl_path = os.path.join(d, "pulse.jsonl")
+            write_jsonl(jsonl_path, ts)
+            windows = read_jsonl(jsonl_path)
+
+        # bitwise oracle: replay EVERY completed query at its version
+        all_recs = [r for r in rep_c.records + rep_o.records if r.ok]
+        all_upds = rep_c.updates + rep_o.updates
+        base_edges = np.stack([g.src, g.dst], axis=1)
+        norm = lambda v: np.nan_to_num(v, posinf=1e30)
+        checked = 0
+        for v in sorted({r.graph_version for r in all_recs}):
+            g_v = from_edge_list(
+                edge_state_at_version(base_edges, all_upds, v),
+                g.num_vertices,
+            )
+            eng = VSWEngine.from_graph(
+                g_v, os.path.join(d, f"oracle{v}"), num_shards=shards,
+                backend="numpy",
+            )
+            for r in all_recs:
+                if r.graph_version != v:
+                    continue
+                solo = eng.run(
+                    apps.get_program(r.program, **oracle_kwargs(r)),
+                    max_iters=r.max_iters,
+                )
+                assert np.array_equal(norm(solo.values), norm(r.values)), (
+                    v, r.program, r.source,
+                )
+                checked += 1
+            eng.close()
+
+    violations = snap["slo"]["violations"]
+    lat, qw, sw = rep_c.latency, rep_c.queue_wait, win["sweep_s"]
+    rows.append(
+        f"fig_qps_closed,{1e6 / max(rep_c.qps, 1e-9):.0f},"
+        f"qps={rep_c.qps:.2f}"
+        f";p50_ms={lat['p50'] * 1e3:.2f}"
+        f";p99_ms={lat['p99'] * 1e3:.2f}"
+        f";queue_p99_ms={qw['p99'] * 1e3:.2f}"
+        f";queue_wait_share={rep_c.queue_wait_share:.3f}"
+        f";completed={rep_c.completed}"
+        f";updates_published={rep_c.updates_published}"
+    )
+    rows.append(
+        f"fig_qps_open,{1e6 / max(rep_o.qps, 1e-9):.0f},"
+        f"qps={rep_o.qps:.2f}"
+        f";offered_qps={rep_o.offered_qps:.2f}"
+        f";p99_ms={rep_o.latency['p99'] * 1e3:.2f}"
+        f";rejected={rep_o.rejected}"
+        f";completed={rep_o.completed}"
+    )
+    rows.append(
+        f"fig_qps_gates,{checked},"
+        f"oracle_checked={checked}"
+        f";bitwise_oracle=True"
+        f";slo_violations={len(violations)}"
+        f";slo_evaluations={snap['slo']['evaluations']}"
+        f";prom_samples={len(prom_samples)}"
+        f";jsonl_windows={len(windows)}"
+        f";conservation_violations={len(snap['conservation_violations'])}"
+    )
+    # the gates: healthy run -> no violations, parseable exports, oracle
+    assert checked == len(all_recs) and checked > 0
+    assert not violations, f"false SLO violations on a healthy run: {violations}"
+    assert len(snap["conservation_violations"]) == 0
+    assert len(prom_samples) > 0 and len(windows) > 0
+    assert rep_c.completed == rep_c.submitted and rep_c.errors == 0
+    assert rep_o.errors == 0
+
+
 SECTIONS = {
     "fig5_selective": lambda rows, quick: fig5_selective(rows),
     "fig8_10_engines": lambda rows, quick: fig8_10_engines(rows),
@@ -950,6 +1111,7 @@ SECTIONS = {
     "fig_delta": lambda rows, quick: fig_delta(rows, quick=quick),
     "fig_obs": lambda rows, quick: fig_obs(rows, quick=quick),
     "fig_restart": lambda rows, quick: fig_restart(rows, quick=quick),
+    "fig_qps": lambda rows, quick: fig_qps(rows, quick=quick),
 }
 
 
@@ -972,6 +1134,7 @@ def run(rows: List[str], *, quick: bool = False,
         fig_delta(rows, quick=True)
         fig_obs(rows, quick=True)
         fig_restart(rows, quick=True)
+        fig_qps(rows, quick=True)
         return
     for name in SECTIONS:
         SECTIONS[name](rows, quick)

@@ -1,0 +1,193 @@
+"""CI regression gate over the consolidated perf trajectory.
+
+Reads a ``BENCH_graphmp.json`` produced by ``bench_graphmp.py
+--consolidated`` and fails (exit 1) when the newest sample of a tracked
+figure regresses more than ``--tolerance`` (default 25%) against the
+median of its prior same-mode samples.
+
+What is gated and what is not — deliberately:
+
+- **Gated (deterministic ratios).** Amortization factors, growth ratios
+  and flatness ratios are *counted* quantities (bytes, loads, peaks) —
+  identical on every machine for a given seed, so a >25% move is a real
+  behavior change, not scheduler noise:
+
+  ===========================  ========  ================================
+  figure                       better    meaning
+  ===========================  ========  ================================
+  fig_serve_amortization       higher    bytes/query K=1 over K=16
+  fig_fusion_amortization      higher    bytes/query per-group over
+                                         interleaved
+  fig_ingest_peak_growth       lower     streamed peak growth over a
+                                         |E| range
+  fig_mesh_host_read_flatness  lower     host bytes/sweep D=8 over D=1
+  ===========================  ========  ================================
+
+- **Sanity-checked only (wall-clock / rates).** QPS, latencies and boot
+  times vary with the runner's CPU and disk cache; gating them at 25%
+  across heterogeneous CI machines would page on noise.  They get floor
+  checks instead (positive QPS, completed == submitted, zero SLO
+  violations, bitwise oracle true) — correctness gates that hold on any
+  machine.  The bench's own asserts (amortization >= 4x, ingest growth
+  < 1.6x, overhead < 5%) remain the absolute floors; this script adds
+  the *relative-to-history* layer on top.
+
+Usage::
+
+    python benchmarks/check_trajectory.py BENCH_graphmp.json
+    python benchmarks/check_trajectory.py BENCH_graphmp.json --tolerance 0.25
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: name -> "higher" | "lower" (which direction is better)
+GATED_RATIOS: Dict[str, str] = {
+    "fig_serve_amortization": "higher",
+    "fig_fusion_amortization": "higher",
+    "fig_ingest_peak_growth": "lower",
+    "fig_mesh_host_read_flatness": "lower",
+}
+
+#: rows whose derived k=v pairs must satisfy exact correctness predicates
+SANITY: Dict[str, Dict[str, str]] = {
+    "fig_qps_gates": {
+        "bitwise_oracle": "True",
+        "slo_violations": "0",
+        "conservation_violations": "0",
+    },
+    "fig_serve_amortization": {"bitwise_oracle_K16": "True"},
+    "fig_fusion_amortization": {"bitwise_oracle": "True"},
+    "fig_mesh_host_read_flatness": {"bitwise_vs_D1": "True"},
+}
+
+#: rows whose VALUE column must be strictly positive (rate sanity floors)
+POSITIVE_VALUE = ("fig_qps_closed", "fig_qps_open")
+
+
+def _parse_derived(derived: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for kv in derived.split(";"):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _samples(traj: Dict, name: str) -> List[Dict]:
+    return traj.get(name, [])
+
+
+def check(doc: Dict, *, tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    traj = doc.get("trajectory", {})
+
+    for name, direction in GATED_RATIOS.items():
+        samples = _samples(traj, name)
+        if not samples:
+            notes.append(f"{name}: no samples yet (not gated)")
+            continue
+        latest = samples[-1]
+        latest_v = float(latest["us_per_call"])
+        # baseline: prior samples from the SAME mode (quick vs full) —
+        # quick and full runs use different graph sizes, so their ratios
+        # are not comparable.
+        prior = [
+            float(s["us_per_call"])
+            for s in samples[:-1]
+            if s.get("quick") == latest.get("quick")
+        ]
+        if not prior:
+            notes.append(
+                f"{name}: first {'quick' if latest.get('quick') else 'full'}"
+                f" sample ({latest_v:.3f}) seeds the baseline"
+            )
+            continue
+        base = statistics.median(prior)
+        if direction == "higher":
+            floor = base * (1.0 - tolerance)
+            ok = latest_v >= floor
+            rel = (base - latest_v) / base if base else 0.0
+        else:
+            ceil = base * (1.0 + tolerance)
+            ok = latest_v <= ceil
+            rel = (latest_v - base) / base if base else 0.0
+        line = (
+            f"{name}: latest={latest_v:.3f} baseline(median of "
+            f"{len(prior)})={base:.3f} ({'-' if direction == 'higher' else '+'}"
+            f"{max(rel, 0.0) * 100:.1f}% vs {tolerance * 100:.0f}% budget)"
+        )
+        (notes if ok else failures).append(
+            line if ok else f"REGRESSION {line}"
+        )
+
+    for name, preds in SANITY.items():
+        samples = _samples(traj, name)
+        if not samples:
+            notes.append(f"{name}: no samples yet (sanity skipped)")
+            continue
+        derived = _parse_derived(samples[-1].get("derived", ""))
+        for key, want in preds.items():
+            got = derived.get(key)
+            if got is None:
+                failures.append(f"{name}: derived key {key!r} missing")
+            elif got != want:
+                failures.append(f"{name}: {key}={got} (expected {want})")
+            else:
+                notes.append(f"{name}: {key}={got} ok")
+
+    for name in POSITIVE_VALUE:
+        samples = _samples(traj, name)
+        if not samples:
+            notes.append(f"{name}: no samples yet (floor skipped)")
+            continue
+        v = float(samples[-1]["us_per_call"])
+        if v <= 0:
+            failures.append(f"{name}: non-positive us/query value {v}")
+        else:
+            notes.append(f"{name}: {v:.0f} us/query (floor ok, not gated)")
+
+    return failures, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="consolidated BENCH_graphmp.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative regression on gated ratios "
+                         "(default 0.25 = 25%%)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"check_trajectory: cannot read {args.path}: {exc}")
+        return 1
+    if "trajectory" not in doc:
+        print(f"check_trajectory: {args.path} has no trajectory (run the "
+              f"bench with --consolidated first)")
+        return 1
+
+    failures, notes = check(doc, tolerance=args.tolerance)
+    for n in notes:
+        print(f"  ok: {n}")
+    for fmsg in failures:
+        print(f"FAIL: {fmsg}")
+    if failures:
+        print(f"check_trajectory: {len(failures)} failure(s)")
+        return 1
+    print(f"check_trajectory: all gates pass "
+          f"({len(notes)} checks, tolerance {args.tolerance * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,30 +1,58 @@
-"""GraphScope: unified tracing + metrics for the VSW stack (DESIGN.md §11).
+"""GraphScope + GraphPulse: tracing, metrics, and time-series telemetry.
 
-Two pieces:
+Four pieces (DESIGN.md §11, §13):
 
 - :mod:`repro.obs.trace` — structured tracer with nestable spans on
   lock-free per-thread ring buffers, exporting Chrome-trace/Perfetto JSON.
   Disabled (the default) it is a guard-flag no-op.
 - :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram instruments,
   a :class:`MetricsRegistry` that absorbs the stack's nine stats
-  dataclasses, and one shared ``verify_conservation()``.
+  dataclasses, one shared ``verify_conservation()``, and windowed
+  histogram snapshots (:class:`HistogramWindow`).
+- :mod:`repro.obs.timeseries` — :class:`TimeSeriesRegistry`: cadenced
+  windowed snapshots of a registry into a bounded ring (counters diffed,
+  histograms logically reset-on-window).
+- :mod:`repro.obs.slo` — declared objectives evaluated as multi-window
+  burn rates over the ring, emitting typed :class:`SLOViolation` records;
+  :mod:`repro.obs.export` renders Prometheus text exposition and JSONL
+  time series.
 """
 
+from .export import (
+    jsonl_lines,
+    parse_prometheus,
+    prometheus_text,
+    read_jsonl,
+    write_jsonl,
+)
 from .metrics import (
     ConservationError,
     Counter,
     Gauge,
     Histogram,
+    HistogramState,
+    HistogramWindow,
     MetricsRegistry,
 )
+from .slo import (
+    SLO,
+    SLOMonitor,
+    SLOViolation,
+    error_rate_slo,
+    latency_slo,
+    share_slo,
+)
+from .timeseries import MergedWindow, TimeSeriesRegistry, WindowSample
 from .trace import (
     NULL_SPAN,
     Span,
     Tracer,
     active,
     counter,
+    dropped_events,
     install,
     instant,
+    publish_drops,
     span,
     tracing,
     uninstall,
@@ -35,14 +63,32 @@ __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "HistogramState",
+    "HistogramWindow",
     "MetricsRegistry",
+    "MergedWindow",
+    "TimeSeriesRegistry",
+    "WindowSample",
+    "SLO",
+    "SLOMonitor",
+    "SLOViolation",
+    "latency_slo",
+    "error_rate_slo",
+    "share_slo",
+    "prometheus_text",
+    "parse_prometheus",
+    "jsonl_lines",
+    "write_jsonl",
+    "read_jsonl",
     "NULL_SPAN",
     "Span",
     "Tracer",
     "active",
     "counter",
+    "dropped_events",
     "install",
     "instant",
+    "publish_drops",
     "span",
     "tracing",
     "uninstall",

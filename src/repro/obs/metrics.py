@@ -49,6 +49,8 @@ __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "HistogramState",
+    "HistogramWindow",
     "MetricsRegistry",
     "ConservationError",
 ]
@@ -169,6 +171,180 @@ class Histogram:
             "max": self.max if self.count else 0.0,
         }
 
+    # -- windowing (GraphPulse, DESIGN.md §13) -----------------------------
+
+    def reset(self) -> None:
+        """Clear all recorded samples (hard reset-on-window semantics)."""
+        with self._lock:
+            self._buckets.clear()
+            self.count = 0
+            self.total = 0.0
+            self.min = math.inf
+            self.max = -math.inf
+            self.zeros = 0
+
+    def state(self) -> "HistogramState":
+        """Immutable cumulative snapshot, cheap to keep as a window mark."""
+        with self._lock:
+            return HistogramState(
+                buckets=dict(self._buckets),
+                count=self.count,
+                total=self.total,
+                zeros=self.zeros,
+                min=self.min,
+                max=self.max,
+            )
+
+    def window_since(self, prev: Optional["HistogramState"]) -> "HistogramWindow":
+        """The histogram of samples recorded AFTER ``prev`` was taken.
+
+        Implemented as a bucket-count diff against the cumulative state, so
+        the live histogram keeps its lifetime data (``metrics_snapshot()``
+        stays all-time) while callers get logical reset-on-window
+        percentiles.  With ``prev=None`` the window is the full lifetime
+        (exact min/max); otherwise window min/max are bucket-edge estimates.
+        """
+        cur = self.state()
+        return cur.diff(prev)
+
+
+class HistogramState:
+    """Frozen cumulative histogram snapshot (a window mark).
+
+    Two states taken from the same histogram diff into a
+    :class:`HistogramWindow` — the samples recorded between the marks.
+    """
+
+    __slots__ = ("buckets", "count", "total", "zeros", "min", "max")
+
+    def __init__(self, *, buckets: Dict[int, int], count: int, total: float,
+                 zeros: int, min: float, max: float):
+        self.buckets = buckets
+        self.count = count
+        self.total = total
+        self.zeros = zeros
+        self.min = min
+        self.max = max
+
+    def diff(self, prev: Optional["HistogramState"]) -> "HistogramWindow":
+        """Samples recorded after ``prev`` (cumulative-count subtraction)."""
+        if prev is None or prev.count == 0:
+            return HistogramWindow(
+                buckets=dict(self.buckets),
+                count=self.count,
+                total=self.total,
+                zeros=self.zeros,
+                lo=self.min if self.count else 0.0,
+                hi=self.max if self.count else 0.0,
+            )
+        buckets = {
+            idx: n - prev.buckets.get(idx, 0)
+            for idx, n in self.buckets.items()
+            if n - prev.buckets.get(idx, 0) > 0
+        }
+        count = self.count - prev.count
+        zeros = self.zeros - prev.zeros
+        if count <= 0:
+            return HistogramWindow(buckets={}, count=0, total=0.0, zeros=0,
+                                   lo=0.0, hi=0.0)
+        # Window min/max cannot be recovered exactly from cumulative state;
+        # clamp to the occupied window buckets (0 when only zeros landed).
+        if buckets:
+            idxs = sorted(buckets)
+            lo = 0.0 if zeros > 0 else math.exp(idxs[0] * _LOG_GROWTH)
+            hi = min(math.exp((idxs[-1] + 1) * _LOG_GROWTH), self.max)
+        else:
+            lo = hi = 0.0
+        return HistogramWindow(
+            buckets=buckets,
+            count=count,
+            total=self.total - prev.total,
+            zeros=max(0, zeros),
+            lo=lo,
+            hi=hi,
+        )
+
+
+class HistogramWindow:
+    """Samples recorded within one window, with the same quantile engine.
+
+    Unlike :class:`Histogram` this is an immutable value object — safe to
+    stash in a time-series ring and merge across windows (multi-window SLO
+    burn rates merge the short windows that make up a long one).
+    """
+
+    __slots__ = ("buckets", "count", "total", "zeros", "lo", "hi")
+
+    def __init__(self, *, buckets: Dict[int, int], count: int, total: float,
+                 zeros: int, lo: float, hi: float):
+        self.buckets = buckets
+        self.count = count
+        self.total = total
+        self.zeros = zeros
+        self.lo = lo
+        self.hi = hi
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        if rank <= self.zeros:
+            return 0.0
+        cum = self.zeros
+        for idx in sorted(self.buckets):
+            cum += self.buckets[idx]
+            if cum >= rank:
+                mid = math.exp((idx + 0.5) * _LOG_GROWTH)
+                return min(max(mid, self.lo), self.hi)
+        return self.hi
+
+    def fraction_above(self, x: float) -> float:
+        """Fraction of window samples whose value exceeds ``x`` (bucket
+        resolution: a bucket counts as above iff its midpoint is)."""
+        if self.count == 0:
+            return 0.0
+        above = sum(
+            n for idx, n in self.buckets.items()
+            if math.exp((idx + 0.5) * _LOG_GROWTH) > x
+        )
+        return above / self.count
+
+    def merge(self, other: "HistogramWindow") -> "HistogramWindow":
+        buckets = dict(self.buckets)
+        for idx, n in other.buckets.items():
+            buckets[idx] = buckets.get(idx, 0) + n
+        if self.count and other.count:
+            lo, hi = min(self.lo, other.lo), max(self.hi, other.hi)
+        else:
+            nz = self if self.count else other
+            lo, hi = nz.lo, nz.hi
+        return HistogramWindow(
+            buckets=buckets,
+            count=self.count + other.count,
+            total=self.total + other.total,
+            zeros=self.zeros + other.zeros,
+            lo=lo,
+            hi=hi,
+        )
+
+    def percentiles(self) -> Dict[str, float]:
+        """Same block shape as :meth:`Histogram.percentiles`."""
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+            "min": self.lo if self.count else 0.0,
+            "max": self.hi if self.count else 0.0,
+        }
+
 
 class MetricsRegistry:
     """Named typed instruments + declared conservation invariants.
@@ -216,6 +392,12 @@ class MetricsRegistry:
     def value(self, name: str) -> float:
         inst = self._instruments[name]
         return inst.value if not isinstance(inst, Histogram) else inst.mean
+
+    def instruments(self) -> Dict[str, Any]:
+        """Point-in-time copy of the name -> instrument map (the objects
+        themselves are shared; used by the time-series snapshotter)."""
+        with self._lock:
+            return dict(self._instruments)
 
     # -- conservation ------------------------------------------------------
 

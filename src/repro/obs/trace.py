@@ -94,6 +94,27 @@ def instant(name: str, **attrs: Any) -> None:
         t.instant(name, **attrs)
 
 
+def dropped_events() -> int:
+    """Events dropped so far by the active tracer's rings (0 when tracing
+    is disabled).  Monotonic while one tracer stays installed, so callers
+    can mirror it into a registry counter (``trace.dropped_events``)."""
+    t = _ACTIVE
+    return t.dropped_events() if t is not None else 0
+
+
+def publish_drops(registry: Any) -> int:
+    """Mirror the active tracer's drop count into ``registry`` as the
+    ``trace.dropped_events`` counter (created on first drop only, so a
+    healthy run's snapshot stays free of zero-noise).  Returns the total.
+    """
+    d = dropped_events()
+    if d > 0:
+        c = registry.counter("trace.dropped_events")
+        if d > c.value:
+            c.add(d - c.value)
+    return d
+
+
 def install(tracer: "Tracer") -> "Tracer":
     """Install `tracer` as the process-wide active tracer."""
     global _ACTIVE
@@ -246,6 +267,11 @@ class Tracer:
         with self._reg_lock:
             return [r.name for r in self._rings]
 
+    def dropped_events(self) -> int:
+        """Oldest-event drops across all rings (ring overflow evidence)."""
+        with self._reg_lock:
+            return sum(max(0, r.n - r.capacity) for r in self._rings)
+
     # -- export ------------------------------------------------------------
 
     def export_chrome(self, path: Optional[str] = None) -> Dict[str, Any]:
@@ -303,6 +329,14 @@ class Tracer:
                 "ring_capacity": self.capacity,
             },
         }
+        if dropped_total > 0:
+            # Loud, not silent: a truncated timeline is misleading evidence.
+            out["otherData"]["warning"] = (
+                f"ring overflow: {dropped_total} oldest events dropped "
+                f"(per-thread capacity {self.capacity}); the timeline is "
+                f"truncated at its start — raise Tracer(capacity=...) to "
+                f"capture the full run"
+            )
         if path is not None:
             with open(path, "w") as f:
                 json.dump(out, f)

@@ -29,10 +29,24 @@ session     :class:`~repro.serve.session.SessionCache` — LRU result cache
 service     :class:`~repro.serve.service.GraphService` — request queue,
             admission by lane budget, worker thread, mask-aware per-request
             latency / I/O attribution.
+loadgen     :class:`~repro.serve.loadgen.LoadGenerator` — closed/open-loop
+            workload replay with warmup/measure/drain phases and a seeded,
+            bitwise-reproducible operation schedule (GraphPulse,
+            DESIGN.md §13).
 ==========  ===============================================================
 """
 
 from .batcher import LaneBatcher, pad_lanes
+from .loadgen import (
+    LoadGenerator,
+    LoadReport,
+    OpRecord,
+    QueryClass,
+    UpdateRecord,
+    Workload,
+    edge_state_at_version,
+    oracle_kwargs,
+)
 from .service import GraphService, QueryResult, ServiceOverloaded, UpdateResult
 from .session import SessionCache
 from .sweep import (
@@ -60,4 +74,12 @@ __all__ = [
     "LaneResult",
     "MeshSweep",
     "SweepIterStats",
+    "LoadGenerator",
+    "LoadReport",
+    "OpRecord",
+    "QueryClass",
+    "UpdateRecord",
+    "Workload",
+    "edge_state_at_version",
+    "oracle_kwargs",
 ]

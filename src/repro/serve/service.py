@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.apps import LaneProgram, get_lane_program
 from repro.core.graph import Graph
+from repro.core.pipeline import ShardLoadError
 from repro.core.vsw import VSWEngine
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
@@ -178,6 +179,17 @@ class GraphService:
         # ``metrics_snapshot()`` can report tail latency + stage timings
         # and ``metrics.verify_conservation()`` covers live sweeps.
         self.metrics = MetricsRegistry()
+        # Typed error/outcome counters (GraphPulse, DESIGN.md §13), created
+        # eagerly so every snapshot carries them even at zero.
+        self.metrics.counter("query.completed")
+        self.metrics.counter("query.rejected")
+        self.metrics.counter("shard.load_error")
+        # GraphPulse telemetry (``start_telemetry``): a cadenced ticker
+        # closing TimeSeriesRegistry windows + optional SLO evaluation.
+        self._telemetry = None  # (ts, monitor, thread, stop_event)
+        self._telemetry_lock = threading.Lock()
+        # Window marks for ``metrics_snapshot(window=True)``.
+        self._window_marks: Dict[str, Any] = {}
 
         self._pending: Deque[_Pending] = deque()
         self._updates: Deque["_PendingUpdate"] = deque()
@@ -336,6 +348,7 @@ class GraphService:
         if cached is not None:
             latency = time.perf_counter() - t0
             self.metrics.histogram("query.latency_s").record(latency)
+            self.metrics.counter("query.completed").add(1)
             trace.instant("service.cache_hit", program=program, source=source)
             fut.set_result(
                 dataclasses.replace(
@@ -369,6 +382,12 @@ class GraphService:
                     self.max_pending is not None
                     and len(self._pending) >= self.max_pending
                 ):
+                    # Typed back-pressure accounting (GraphPulse): the SLO
+                    # monitor's error-rate objective reads this counter.
+                    self.metrics.counter("query.rejected").add(1)
+                    trace.instant(
+                        "service.rejected", program=program, source=source
+                    )
                     raise ServiceOverloaded(
                         f"pending queue at admission cap ({self.max_pending})"
                     )
@@ -551,6 +570,7 @@ class GraphService:
                     (p.prog.key, p.source, version),
                     dataclasses.replace(qr, values=res.values.copy()),
                 )
+                self.metrics.counter("query.completed").add(1)
                 resolved.add(p.request_id)
                 with self._cond:
                     self._queries_done += 1
@@ -580,6 +600,9 @@ class GraphService:
             ):
                 sweep.run(seed_groups, backfill=backfill, on_retire=on_retire)
         except BaseException as exc:  # propagate to every unresolved caller
+            if isinstance(exc, ShardLoadError):
+                # Prefetch failures are a typed, SLO-visible error class.
+                self.metrics.counter("shard.load_error").add(1)
             for p in admitted:
                 if p.request_id not in resolved and not p.future.done():
                     p.future.set_exception(exc)
@@ -631,7 +654,7 @@ class GraphService:
             out["shards_compacted"] = self._recompactor.total.shards_compacted
         return out
 
-    def metrics_snapshot(self) -> Dict[str, Any]:
+    def metrics_snapshot(self, *, window: bool = False) -> Dict[str, Any]:
         """Tail-latency + stage-timing snapshot (GraphScope, DESIGN.md §11).
 
         Percentile blocks are log-bucket estimates (≲3.5% relative error):
@@ -641,23 +664,145 @@ class GraphService:
         sweeps ingested so far (empty list = all conserved).  The
         benchmark harness writes the latency percentiles into consolidated
         ``BENCH_graphmp.json`` rows.
+
+        ``window=True`` (GraphPulse, DESIGN.md §13) reports each histogram
+        block over the records since the PREVIOUS windowed snapshot
+        (logical reset-on-window via bucket diffs — the live instruments
+        keep their lifetime data) and advances the window marks.
+
+        Every snapshot carries an ``errors`` block (typed outcome
+        counters: completions, admission-cap rejections, shard prefetch
+        failures, tracer ring drops); when :meth:`start_telemetry` is
+        active, ``timeseries`` and ``slo`` blocks report ring occupancy
+        and the SLO monitor's burn rates / violation records.
         """
-        h = self.metrics.histogram
-        return {
-            "query_latency_s": h("query.latency_s").percentiles(),
-            "queue_wait_s": h("query.queue_wait_s").percentiles(),
-            "sweep_s": h("query.sweep_s").percentiles(),
+        trace.publish_drops(self.metrics)
+
+        def block(name: str) -> Dict[str, Any]:
+            hist = self.metrics.histogram(name)
+            if not window:
+                return hist.percentiles()
+            win = hist.window_since(self._window_marks.get(name))
+            self._window_marks[name] = hist.state()
+            return win.percentiles()
+
+        out: Dict[str, Any] = {
+            "query_latency_s": block("query.latency_s"),
+            "queue_wait_s": block("query.queue_wait_s"),
+            "sweep_s": block("query.sweep_s"),
             "stages": {
-                "iter_s": h("sweep.time_s").percentiles(),
-                "load_s": h("stage.load_s").percentiles(),
-                "load_wait_s": h("stage.load_wait_s").percentiles(),
-                "exec_s": h("stage.exec_s").percentiles(),
+                "iter_s": block("sweep.time_s"),
+                "load_s": block("stage.load_s"),
+                "load_wait_s": block("stage.load_wait_s"),
+                "exec_s": block("stage.exec_s"),
+            },
+            "errors": {
+                "completed": self.metrics.counter("query.completed").value,
+                "rejected": self.metrics.counter("query.rejected").value,
+                "shard_load_errors": self.metrics.counter(
+                    "shard.load_error"
+                ).value,
+                "trace_dropped_events": trace.dropped_events(),
             },
             "conservation_violations": self.metrics.verify_conservation(
                 strict=False
             ),
             "service": self.stats(),
         }
+        with self._telemetry_lock:
+            tel = self._telemetry
+        if tel is not None:
+            ts, monitor = tel[0], tel[1]
+            out["timeseries"] = {
+                "windows": ts.num_windows,
+                "retained": len(ts.samples()),
+                "dropped_samples": ts.dropped_samples,
+                "interval_s": ts.interval_s,
+            }
+            if monitor is not None:
+                out["slo"] = monitor.snapshot()
+        return out
+
+    # ----------------------------------------------------------- telemetry
+    def start_telemetry(
+        self,
+        *,
+        interval_s: float = 0.25,
+        capacity: int = 2048,
+        slos=None,
+        windows=None,
+    ) -> "Any":
+        """Start the GraphPulse cadence: a daemon ticker that closes one
+        :class:`~repro.obs.timeseries.TimeSeriesRegistry` window every
+        ``interval_s`` seconds (and mirrors tracer ring drops into the
+        registry).  Pass ``slos`` (a list of :class:`repro.obs.slo.SLO`)
+        to also evaluate multi-window burn rates each tick — violations
+        then appear in ``metrics_snapshot()["slo"]``.
+
+        Returns the :class:`TimeSeriesRegistry`; the optional monitor is
+        at :attr:`slo_monitor`.  Idempotent-hostile by design: starting
+        twice raises (stop first) so two tickers can never double-diff
+        the counter marks.
+        """
+        from repro.obs.slo import SLOMonitor
+        from repro.obs.timeseries import TimeSeriesRegistry
+
+        with self._telemetry_lock:
+            if self._telemetry is not None:
+                raise RuntimeError("telemetry already running")
+            ts = TimeSeriesRegistry(
+                self.metrics, capacity=capacity, interval_s=interval_s
+            )
+            monitor = None
+            if slos:
+                kw = {"windows": windows} if windows is not None else {}
+                monitor = SLOMonitor(ts, slos, **kw)
+            stop = threading.Event()
+
+            def loop() -> None:
+                while not stop.wait(interval_s):
+                    trace.publish_drops(self.metrics)
+                    ts.tick()
+                    if monitor is not None:
+                        monitor.evaluate()
+
+            th = threading.Thread(
+                target=loop, name="graphpulse-ticker", daemon=True
+            )
+            self._telemetry = (ts, monitor, th, stop)
+            th.start()
+            return ts
+
+    def stop_telemetry(self, *, final_tick: bool = True):
+        """Stop the telemetry ticker (no-op when not running); optionally
+        close one last window so the run's tail isn't lost to cadence
+        truncation.  Returns the (now-quiescent) TimeSeriesRegistry or
+        None."""
+        with self._telemetry_lock:
+            tel, self._telemetry = self._telemetry, None
+        if tel is None:
+            return None
+        ts, monitor, th, stop = tel
+        stop.set()
+        th.join()
+        if final_tick:
+            trace.publish_drops(self.metrics)
+            ts.tick()
+            if monitor is not None:
+                monitor.evaluate()
+        return ts
+
+    @property
+    def timeseries(self):
+        """The live TimeSeriesRegistry, or None when telemetry is off."""
+        with self._telemetry_lock:
+            return self._telemetry[0] if self._telemetry else None
+
+    @property
+    def slo_monitor(self):
+        """The live SLOMonitor, or None (telemetry off / no SLOs given)."""
+        with self._telemetry_lock:
+            return self._telemetry[1] if self._telemetry else None
 
     def bump_graph_version(self) -> int:
         """Invalidate all cached results (graph changed underneath).
@@ -739,6 +884,7 @@ class GraphService:
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+        self.stop_telemetry(final_tick=False)
         with self._close_lock:
             if self._worker.is_alive():
                 self._worker.join()  # drains queued queries AND staged updates
