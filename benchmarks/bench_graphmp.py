@@ -369,7 +369,89 @@ def fig_serve(rows: List[str], *, quick: bool = False) -> None:
     assert amort >= 4.0, f"K=16 amortization {amort:.2f}x below 4x floor"
 
 
-def fig_fusion(rows: List[str], *, quick: bool = False) -> None:
+def _fig_fusion_ragged(rows: List[str], *, quick: bool = False) -> None:
+    """RaggedFuse dispatch-count figure (ISSUE 10 acceptance).
+
+    A mixed min+sum workload on the jnp lane executor, run through the
+    SAME FusedSweep twice: ``ragged=False`` (the PR 5 multi path — G
+    launches per shard batch) and ``ragged=True`` (ONE ragged launch per
+    batch).  Asserts the ragged run's dispatch count collapses from
+    G x batches to batches, bitwise-identical results per lane, and
+    emits the gated ``fig_fusion_dispatch_ratio`` row.
+    """
+    from repro.serve import FusedSweep, LaneSeed
+
+    if quick:
+        g = rmat_graph(3_000, 40_000, seed=11)
+        iters, shards = 6, 6
+    else:
+        g = _mk_graph(seed=11)
+        iters, shards = 8, SHARDS
+    rng = np.random.default_rng(12)
+    bfs, sssp, ppr = apps.lane_bfs(), apps.lane_sssp(), apps.lane_ppr()
+    srcs = rng.choice(g.num_vertices, size=8, replace=False).astype(int)
+    mk_seeds = lambda: [
+        [LaneSeed(source=int(srcs[0]), max_iters=iters, token="b0",
+                  program=bfs),
+         LaneSeed(source=int(srcs[1]), max_iters=iters, token="s0",
+                  program=sssp),
+         LaneSeed(source=int(srcs[2]), max_iters=iters, token="b1",
+                  program=bfs)],
+        [LaneSeed(source=int(srcs[3]), max_iters=iters, token="p0",
+                  program=ppr),
+         LaneSeed(source=int(srcs[4]), max_iters=iters, token="p1",
+                  program=ppr)],
+    ]
+
+    disp: Dict[str, int] = {}
+    batches: Dict[str, int] = {}
+    vals: Dict[str, Dict[str, np.ndarray]] = {}
+    wall: Dict[str, float] = {}
+    overlap = 0.0
+    with tempfile.TemporaryDirectory() as d:
+        eng = VSWEngine.from_graph(g, d, num_shards=shards, backend="jnp",
+                                   batch_shards=2)
+        for name, ragged in (("multi", False), ("ragged", True)):
+            sweep = FusedSweep(eng, batch_shards=2, lane_selective=False,
+                               ragged=ragged)
+            t0 = time.perf_counter()
+            res = sweep.run(mk_seeds())
+            wall[name] = time.perf_counter() - t0
+            disp[name] = sum(s.dispatches for s in sweep.iter_stats)
+            batches[name] = sum(s.batches for s in sweep.iter_stats)
+            vals[name] = {r.token: r.values for r in res}
+            if ragged:
+                overlap = sum(s.overlap_s for s in sweep.iter_stats)
+        eng.close()
+
+    bitwise = set(vals["multi"]) == set(vals["ragged"]) and all(
+        np.array_equal(np.nan_to_num(vals["multi"][t], posinf=1e30),
+                       np.nan_to_num(vals["ragged"][t], posinf=1e30))
+        for t in vals["multi"]
+    )
+    one_launch = disp["ragged"] == batches["ragged"]
+    assert bitwise, "ragged sweep diverged from the multi path"
+    assert one_launch, (disp, batches)
+    assert disp["multi"] > disp["ragged"], (disp, batches)
+    ratio = disp["multi"] / max(disp["ragged"], 1)
+    for name in ("multi", "ragged"):
+        rows.append(
+            f"fig_fusion_{name}_launch,{wall[name] * 1e6:.0f},"
+            f"dispatches={disp[name]};batches={batches[name]}"
+        )
+    rows.append(
+        f"fig_fusion_dispatch_ratio,{ratio:.2f},"
+        f"multi_dispatches={disp['multi']}"
+        f";ragged_dispatches={disp['ragged']}"
+        f";batches={batches['ragged']}"
+        f";overlap_s={overlap:.4f}"
+        f";ragged_one_launch={one_launch}"
+        f";bitwise_vs_multi={bitwise}"
+    )
+
+
+def fig_fusion(rows: List[str], *, quick: bool = False,
+               ragged: bool = False) -> None:
     """Cross-query shard-plan fusion (ISSUE 5 acceptance).
 
     A mixed BFS+SSSP+PPR workload at lane budget K=16 on the
@@ -480,6 +562,8 @@ def fig_fusion(rows: List[str], *, quick: bool = False) -> None:
     assert bytes_per_query["interleaved"] < bytes_per_query["fused"], (
         "interleaving gained nothing over same-algebra fusion alone"
     )
+    if ragged:
+        _fig_fusion_ragged(rows, quick=quick)
 
 
 def fig_ingest(rows: List[str], *, quick: bool = False) -> None:
@@ -1116,19 +1200,27 @@ SECTIONS = {
 
 
 def run(rows: List[str], *, quick: bool = False,
-        sections: Optional[List[str]] = None) -> None:
+        sections: Optional[List[str]] = None, ragged: bool = False) -> None:
+    # ``ragged`` only augments fig_fusion (the RaggedFuse dispatch-count
+    # sub-figure); every other section ignores it.
+    def _dispatch(name: str) -> None:
+        if name == "fig_fusion":
+            fig_fusion(rows, quick=quick, ragged=ragged)
+        else:
+            SECTIONS[name](rows, quick)
+
     if sections:
         for name in sections:
             if name not in SECTIONS:
                 raise SystemExit(
                     f"unknown section {name!r}; have {sorted(SECTIONS)}"
                 )
-            SECTIONS[name](rows, quick)
+            _dispatch(name)
         return
     if quick:
         fig3_pipeline(rows, quick=True)
         fig_serve(rows, quick=True)
-        fig_fusion(rows, quick=True)
+        fig_fusion(rows, quick=True, ragged=ragged)
         fig_ingest(rows, quick=True)
         fig_mesh(rows, quick=True)
         fig_delta(rows, quick=True)
@@ -1137,7 +1229,7 @@ def run(rows: List[str], *, quick: bool = False,
         fig_qps(rows, quick=True)
         return
     for name in SECTIONS:
-        SECTIONS[name](rows, quick)
+        _dispatch(name)
 
 
 def merge_consolidated(path: str, rows: List[str], *, quick: bool,
@@ -1187,6 +1279,10 @@ def main() -> None:
                          f"{sorted(SECTIONS)}")
     ap.add_argument("--quick", action="store_true",
                     help="small graphs, smoke subset (pipeline + serve)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="add the RaggedFuse dispatch-count sub-figure to "
+                         "fig_fusion (jnp lane executor, one ragged launch "
+                         "per batch vs G; DESIGN.md §14)")
     ap.add_argument("--out", default=None,
                     help="also write rows as JSON to this path")
     ap.add_argument("--consolidated", default=None, metavar="PATH",
@@ -1205,7 +1301,8 @@ def main() -> None:
 
     rows: List[str] = []
     t0 = time.perf_counter()
-    run(rows, quick=args.quick, sections=args.sections or None)
+    run(rows, quick=args.quick, sections=args.sections or None,
+        ragged=args.ragged)
     wall = time.perf_counter() - t0
 
     if tracer is not None:

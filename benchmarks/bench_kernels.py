@@ -111,8 +111,128 @@ def bench_cache_modes(rows: List[str]) -> None:
             )
 
 
+def bench_ragged_launch(rows: List[str]) -> None:
+    """Launch-overhead microbench for RaggedFuse (DESIGN.md §14).
+
+    For G fusion groups on one decoded shard batch, the multi path pays G
+    kernel launches; the ragged path pays ONE with an in-kernel combine-arm
+    select.  Small graph on purpose: at this scale per-launch overhead
+    (trace + staging + dispatch) dominates compute, which is exactly the
+    cost the ragged path removes.  Asserts per-group bitwise equality at
+    every G.
+    """
+    from repro.core.csr import csr_to_ell
+    from repro.core.graph import rmat_graph
+    from repro.core.sharding import preprocess
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    g = rmat_graph(3_000, 40_000, seed=5)
+    meta, shards = preprocess(g, num_shards=2)
+    ells = [csr_to_ell(s, g.num_vertices, window=1024, k=16, tr=8)
+            for s in shards]
+    rng = np.random.default_rng(5)
+    combines_all = ["sum", "min", "max", "sum", "min", "max", "sum", "min"]
+    for G in (1, 2, 4, 8):
+        combines = combines_all[:G]
+        msgs = [rng.random((2, g.num_vertices)).astype(np.float32)
+                for _ in range(G)]
+        t_multi = _t(
+            lambda: spmv_ops.ell_update_lanes_multi(ells, msgs, combines),
+            reps=5,
+        )
+        t_ragged = _t(
+            lambda: spmv_ops.ell_update_lanes_ragged(ells, msgs, combines),
+            reps=5,
+        )
+        ref = spmv_ops.ell_update_lanes_multi(ells, msgs, combines)
+        out = spmv_ops.ell_update_lanes_ragged(ells, msgs, combines)
+        bitwise = all(
+            np.array_equal(np.nan_to_num(a, posinf=1e30, neginf=-1e30),
+                           np.nan_to_num(b, posinf=1e30, neginf=-1e30))
+            for accs_r, accs_m in zip(out, ref)
+            for a, b in zip(accs_r, accs_m)
+        )
+        assert bitwise, f"ragged != multi at G={G}"
+        rows.append(
+            f"ragged_launch_G{G},{t_ragged*1e6:.0f},"
+            f"multi_us={t_multi*1e6:.0f}"
+            f";speedup={t_multi/max(t_ragged, 1e-12):.2f}"
+            f";launches_saved={G - 1}"
+            f";bitwise={bitwise}"
+        )
+
+
+SECTIONS = {
+    "spmv": bench_spmv,
+    "bloom": bench_bloom,
+    "attention": bench_attention,
+    "cache_modes": bench_cache_modes,
+    "ragged_launch": bench_ragged_launch,
+}
+
+
 def run(rows: List[str]) -> None:
     bench_spmv(rows)
     bench_bloom(rows)
     bench_attention(rows)
     bench_cache_modes(rows)
+    bench_ragged_launch(rows)
+
+
+def main() -> None:
+    """Standalone entry point: pick sections, optionally merge the rows
+    into the consolidated perf trajectory (same file/format as
+    bench_graphmp --consolidated)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", metavar="section",
+                    help=f"microbench sections (default: all); one of "
+                         f"{sorted(SECTIONS)}")
+    ap.add_argument("--out", default=None,
+                    help="also write rows as JSON to this path")
+    ap.add_argument("--consolidated", default=None, metavar="PATH",
+                    help="merge rows into a persistent perf-trajectory "
+                         "JSON (bench_graphmp format)")
+    args = ap.parse_args()
+
+    rows: List[str] = []
+    t0 = time.perf_counter()
+    if args.sections:
+        for name in args.sections:
+            if name not in SECTIONS:
+                raise SystemExit(
+                    f"unknown section {name!r}; have {sorted(SECTIONS)}"
+                )
+            SECTIONS[name](rows)
+    else:
+        run(rows)
+    wall = time.perf_counter() - t0
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if args.out:
+        payload = {
+            "bench": "kernels",
+            "wall_s": wall,
+            "rows": [
+                dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                for r in rows
+            ],
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.out}")
+    if args.consolidated:
+        try:
+            from benchmarks.bench_graphmp import merge_consolidated
+        except ImportError:
+            from bench_graphmp import merge_consolidated
+        merge_consolidated(args.consolidated, rows, quick=False, wall_s=wall)
+        print(f"# merged {len(rows)} rows into {args.consolidated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,8 @@ What is gated and what is not — deliberately:
   fig_serve_amortization       higher    bytes/query K=1 over K=16
   fig_fusion_amortization      higher    bytes/query per-group over
                                          interleaved
+  fig_fusion_dispatch_ratio    higher    multi-path launches over ragged
+                                         one-launch (RaggedFuse)
   fig_ingest_peak_growth       lower     streamed peak growth over a
                                          |E| range
   fig_mesh_host_read_flatness  lower     host bytes/sweep D=8 over D=1
@@ -50,6 +52,7 @@ from typing import Dict, List, Optional, Tuple
 GATED_RATIOS: Dict[str, str] = {
     "fig_serve_amortization": "higher",
     "fig_fusion_amortization": "higher",
+    "fig_fusion_dispatch_ratio": "higher",
     "fig_ingest_peak_growth": "lower",
     "fig_mesh_host_read_flatness": "lower",
 }
@@ -63,6 +66,10 @@ SANITY: Dict[str, Dict[str, str]] = {
     },
     "fig_serve_amortization": {"bitwise_oracle_K16": "True"},
     "fig_fusion_amortization": {"bitwise_oracle": "True"},
+    "fig_fusion_dispatch_ratio": {
+        "ragged_one_launch": "True",
+        "bitwise_vs_multi": "True",
+    },
     "fig_mesh_host_read_flatness": {"bitwise_vs_D1": "True"},
 }
 

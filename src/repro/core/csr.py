@@ -41,6 +41,8 @@ __all__ = [
     "next_pow2",
     "bucket_rows",
     "pad_ell_arrays",
+    "ragged_lane_pad",
+    "ragged_lane_concat",
     "DEFAULT_K",
     "DEFAULT_TR",
     "DEFAULT_WINDOW",
@@ -224,6 +226,63 @@ def concat_ells(ells: Sequence[EllShard]) -> EllBatch:
         k=first.k,
         tr=first.tr,
     )
+
+
+def ragged_lane_pad(lane_counts: Sequence[int]) -> int:
+    """Padded lane count for ONE ragged launch covering all fusion groups.
+
+    The multi-launch path pads every group to its own power of two, so its
+    total waste is ``sum(next_pow2(k_g)) - sum(k_g)``.  A single ragged
+    launch only needs ONE padded lane axis; padding the concatenated count
+    to ``next_pow2(K_total)`` keeps the jit shape-bucket behaviour but can
+    exceed the per-group waste (e.g. counts ``1,1,1`` -> 4 vs 3), so the
+    target is capped at the per-group pow2 total — ragged waste is then
+    provably never worse than the G-launch waste.
+    """
+    k_total = int(sum(int(k) for k in lane_counts))
+    per_group = int(sum(next_pow2(max(int(k), 1)) for k in lane_counts))
+    return max(1, min(next_pow2(max(k_total, 1)), per_group))
+
+
+def ragged_lane_concat(msgs_by_group, combines: Sequence[str], *,
+                       n_cols: Optional[int] = None):
+    """Concatenate per-group lane matrices along the lane axis for one
+    ragged launch.
+
+    Returns ``(msgs_all, combine_ids, combines_set, group_slices)``:
+
+    - ``msgs_all``   [k_pad, n_cols] — groups stacked then zero-padded to
+      ``ragged_lane_pad`` lanes (and to ``n_cols`` columns when the caller
+      passes the window-padded vertex count, saving a second copy).
+    - ``combine_ids`` int32 [k_pad] — per lane, the index of its combine op
+      in ``combines_set``.  Padding lanes get ``len(combines_set)`` — an id
+      that matches NO arm, so every selection pass leaves them at the zero
+      init and the results are discarded by ``group_slices`` anyway.
+    - ``combines_set`` — deduplicated combine ops in first-seen order (two
+      groups sharing a monoid share one kernel arm).
+    - ``group_slices`` — per input group, its lane interval in ``msgs_all``.
+    """
+    if len(msgs_by_group) != len(combines):
+        raise ValueError("one combine op per group required")
+    if not msgs_by_group:
+        raise ValueError("empty ragged lane concat")
+    combines_set = tuple(dict.fromkeys(combines))
+    counts = [int(m.shape[0]) for m in msgs_by_group]
+    k_pad = ragged_lane_pad(counts)
+    n = int(msgs_by_group[0].shape[1] if n_cols is None else n_cols)
+    msgs_all = np.zeros((k_pad, n), dtype=msgs_by_group[0].dtype)
+    combine_ids = np.full(k_pad, len(combines_set), dtype=np.int32)
+    group_slices = []
+    off = 0
+    for m, c in zip(msgs_by_group, combines):
+        if m.shape[1] > n:
+            raise ValueError("group lane matrix wider than n_cols")
+        sl = slice(off, off + int(m.shape[0]))
+        msgs_all[sl, : m.shape[1]] = m
+        combine_ids[sl] = combines_set.index(c)
+        group_slices.append(sl)
+        off = sl.stop
+    return msgs_all, combine_ids, combines_set, group_slices
 
 
 def csr_to_ell(

@@ -44,7 +44,10 @@ import numpy as np
 
 from ..obs import trace
 from .apps import COMBINE_IDENTITY
-from .csr import EllShard, bucket_rows, concat_ells, next_pow2, pad_ell_arrays
+from .csr import (
+    EllShard, bucket_rows, concat_ells, next_pow2, pad_ell_arrays,
+    ragged_lane_concat,
+)
 from .pipeline import LoadedShard
 from .sharding import ShardCSR
 
@@ -330,6 +333,82 @@ def update_shards_jnp_lanes_multi(
     return out
 
 
+@functools.lru_cache(maxsize=64)
+def _jnp_ell_lanes_ragged_fn(
+    n_ell: int, k: int, tr: int, rows: int, window: int, combines: tuple
+):
+    """RaggedFuse jnp variant: ONE jit dispatch updates the concatenated
+    lane state of ALL fusion groups, selecting each lane's combine arm via
+    its ``combine_ids`` entry.  The per-arm bodies are the exact
+    :func:`_ell_fn_impl` closures the per-group multi path vmaps, and
+    ``jnp.where`` keeps the selected arm's value bit-for-bit, so each
+    lane's row is bitwise :func:`update_shards_jnp_lanes_multi`'s."""
+    import jax
+    import jax.numpy as jnp
+
+    bodies = [_ell_fn_impl(tr, rows, window, c) for c in combines]
+
+    def fn(ell_idx, ell_mask, seg, tile_window, combine_ids, msgs2d):
+        acc = jnp.zeros((msgs2d.shape[0], rows), msgs2d.dtype)
+        for ci, body in enumerate(bodies):
+            acc_c = jax.vmap(body, in_axes=(None, None, None, None, 0))(
+                ell_idx, ell_mask, seg, tile_window, msgs2d
+            )
+            acc = jnp.where((combine_ids == ci)[:, None], acc_c, acc)
+        return acc
+
+    return jax.jit(fn)
+
+
+def _ragged_stage_lanes(msgs_by_group, combines, n_pad_v: int):
+    """Stage the concatenated lane state of ALL groups to device once per
+    sweep iteration (reused across every shard batch — ISSUE 10 satellite:
+    no re-pad per flush while lane membership is unchanged)."""
+    import jax.numpy as jnp
+
+    msgs_all, cids, combines_set, slices = ragged_lane_concat(
+        msgs_by_group, combines, n_cols=n_pad_v
+    )
+    return {
+        "msgs": jnp.asarray(msgs_all),
+        "cids": jnp.asarray(cids),
+        "combines": combines_set,
+        "slices": slices,
+        "k_total": int(sum(int(m.shape[0]) for m in msgs_by_group)),
+        "k_pad": int(msgs_all.shape[0]),
+    }
+
+
+def _ragged_dispatch_jnp(ells: List[EllShard], lane_ctx, *,
+                         interpret: bool = True):
+    """Launch ONE jnp ragged update; the accumulator is left unforced so
+    the caller can overlap the next batch's decode (double buffering)."""
+    import jax.numpy as jnp
+
+    batch, n_ell_pad, idx, mask, seg, tw = _staged_batch(ells)
+    rows_pad = next_pow2(batch.rows_total)
+    fn = _jnp_ell_lanes_ragged_fn(
+        n_ell_pad, batch.k, batch.tr, rows_pad, batch.window,
+        lane_ctx["combines"],
+    )
+    acc = fn(jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+             jnp.asarray(tw), lane_ctx["cids"], lane_ctx["msgs"])
+    return batch, acc
+
+
+def _ragged_dispatch_pallas(ells: List[EllShard], lane_ctx, *,
+                            interpret: bool = True):
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    return spmv_ops.ragged_dispatch(ells, lane_ctx, interpret=interpret)
+
+
+def _ragged_collect(batch, acc, group_slices) -> List[List[np.ndarray]]:
+    """Force a ragged accumulator and slice per group per shard."""
+    acc = np.asarray(acc)
+    return [batch.split(acc[sl]) for sl in group_slices]
+
+
 def _update_shard_pallas_lanes(
     csr: ShardCSR, ell: EllShard, msgs: np.ndarray, combine: str
 ) -> np.ndarray:
@@ -388,6 +467,11 @@ _MULTI_LANE_BACKENDS: Dict[str, Callable] = {
     "pallas": _update_shards_pallas_lanes_multi,
 }
 
+_RAGGED_LANE_BACKENDS: Dict[str, Callable] = {
+    "jnp": _ragged_dispatch_jnp,
+    "pallas": _ragged_dispatch_pallas,
+}
+
 #: One program group's dispatch request for ``run_groups``: the group's
 #: ``[K_g, |V|]`` message matrix and its combine monoid, or None when the
 #: group has nothing to dispatch for these shards (every lane masked off /
@@ -418,6 +502,18 @@ class ExecStats:
     dispatches: int = 0
     shards_executed: int = 0
     exec_s: float = 0.0
+    #: shard batches flushed this iteration (a ragged flush is ONE dispatch
+    #: per batch; the multi path pays G — conservation:
+    #: ragged_dispatches <= batches <= dispatches, DESIGN.md §14).
+    batches: int = 0
+    ragged_dispatches: int = 0
+    #: live (un-padded) lanes covered by ragged launches, summed per flush;
+    #: conservation: sum(group_lanes.values()) == ragged_lanes.
+    ragged_lanes: int = 0
+    group_lanes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: wall time a dispatched batch stayed in flight while the host staged
+    #: the next one (the double-buffer overlap window).
+    overlap_s: float = 0.0
     #: mesh executors only: device id -> shard applications / SPMD launches
     #: routed to that device (empty on single-device executors).
     #: Conservation: sum(device_shards.values()) == shards_executed.
@@ -427,6 +523,9 @@ class ExecStats:
     def reset(self) -> None:
         self.dispatches = self.shards_executed = 0
         self.exec_s = 0.0
+        self.batches = self.ragged_dispatches = self.ragged_lanes = 0
+        self.group_lanes = {}
+        self.overlap_s = 0.0
         self.device_shards = {}
         self.device_dispatches = {}
 
@@ -508,7 +607,7 @@ class BatchedEllExecutor:
     """
 
     def __init__(self, backend: str, batch_shards: int = 4, *,
-                 lanes: bool = False):
+                 lanes: bool = False, ragged: bool = True):
         table = _BATCHED_LANE_BACKENDS if lanes else _BATCHED_BACKENDS
         if backend not in table:
             raise ValueError(
@@ -519,8 +618,14 @@ class BatchedEllExecutor:
         self.backend_name = backend
         self.batch_shards = batch_shards
         self.lanes = lanes
+        #: RaggedFuse (DESIGN.md §14): run_groups concatenates every live
+        #: group along the lane axis and launches ONE ragged kernel per
+        #: shard batch instead of G, double-buffering collection against
+        #: the next batch's host decode.
+        self.ragged = bool(ragged) and lanes and backend in _RAGGED_LANE_BACKENDS
         self._fn = table[backend]
         self._multi_fn = _MULTI_LANE_BACKENDS[backend] if lanes else None
+        self._ragged_fn = _RAGGED_LANE_BACKENDS.get(backend) if lanes else None
 
     def run(
         self,
@@ -567,6 +672,9 @@ class BatchedEllExecutor:
         """
         if not self.lanes:
             raise RuntimeError("run_groups needs a lane executor")
+        if self.ragged:
+            yield from self._run_groups_ragged(loaded, groups, stats)
+            return
         buf: List[LoadedShard] = []
         for ls in loaded:
             buf.append(ls)
@@ -594,6 +702,7 @@ class BatchedEllExecutor:
             )
         if stats is not None:
             stats.dispatches += len(live)
+            stats.batches += 1
             stats.shards_executed += len(buf) * len(live)
             stats.exec_s += time.perf_counter() - t0
         for (gi, _), accs in zip(live, accs_by_group):
@@ -602,6 +711,86 @@ class BatchedEllExecutor:
                     ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc),
                     batch_size=len(buf),
                 )
+
+    def _run_groups_ragged(self, loaded, groups, stats):
+        """RaggedFuse hot loop: 1 load, 1 concat, ONE kernel launch per
+        batch covering every live group, with the collect of batch ``i``
+        deferred until batch ``i+1`` has been dispatched — the launch stays
+        in flight while the host stages the next batch (double buffering;
+        the pipeline's prefetch threads fill the ``loaded`` iterator
+        concurrently, so the pull below overlaps device compute too).
+        """
+        live = [(gi, ga) for gi, ga in enumerate(groups) if ga is not None]
+        if not live:
+            for _ in loaded:  # consume the stream exactly like the G-path
+                pass
+            return
+        lane_ctx = None  # staged on first flush, reused across batches
+        k_total = sum(int(ga[0].shape[0]) for _, ga in live)
+
+        def dispatch(buf):
+            nonlocal lane_ctx
+            t0 = time.perf_counter()
+            with trace.span(
+                "exec.dispatch",
+                shards=len(buf),
+                groups=len(live),
+                backend=self.backend_name,
+                ragged=True,
+            ):
+                if lane_ctx is None:
+                    ell = buf[0].ell
+                    lane_ctx = _ragged_stage_lanes(
+                        [ga[0] for _, ga in live],
+                        [ga[1] for _, ga in live],
+                        ell.num_windows * ell.window,
+                    )
+                batch, acc = self._ragged_fn([ls.ell for ls in buf], lane_ctx)
+            if stats is not None:
+                stats.dispatches += 1
+                stats.ragged_dispatches += 1
+                stats.batches += 1
+                stats.shards_executed += len(buf) * len(live)
+                stats.ragged_lanes += k_total
+                for gi, ga in live:
+                    stats.group_lanes[gi] = (
+                        stats.group_lanes.get(gi, 0) + int(ga[0].shape[0])
+                    )
+                stats.exec_s += time.perf_counter() - t0
+            return buf, batch, acc, time.perf_counter()
+
+        def collect(p):
+            buf, batch, acc, t_launch = p
+            if stats is not None:
+                stats.overlap_s += time.perf_counter() - t_launch
+            t0 = time.perf_counter()
+            accs_by_group = _ragged_collect(batch, acc, lane_ctx["slices"])
+            if stats is not None:
+                stats.exec_s += time.perf_counter() - t0
+            for (gi, _), accs in zip(live, accs_by_group):
+                for ls, acc_s in zip(buf, accs):
+                    yield gi, ExecResult(
+                        ls.shard_id, ls.ell.v0, ls.ell.v1, np.asarray(acc_s),
+                        batch_size=len(buf),
+                    )
+
+        pending = None
+        buf: List[LoadedShard] = []
+        for ls in loaded:
+            buf.append(ls)
+            if len(buf) >= self.batch_shards:
+                nxt = dispatch(buf)
+                buf = []
+                if pending is not None:
+                    yield from collect(pending)
+                pending = nxt
+        if buf:
+            nxt = dispatch(buf)
+            if pending is not None:
+                yield from collect(pending)
+            pending = nxt
+        if pending is not None:
+            yield from collect(pending)
 
 
 class MeshLaneExecutor:
@@ -624,7 +813,7 @@ class MeshLaneExecutor:
 
     def __init__(self, backend: str, partition, mesh=None, *,
                  batch_shards: int = 1, lanes: bool = False,
-                 interpret: bool = True):
+                 interpret: bool = True, ragged: bool = True):
         if backend not in LANE_BACKENDS:
             raise ValueError(
                 f"unknown backend {backend}; have {sorted(LANE_BACKENDS)}"
@@ -639,6 +828,12 @@ class MeshLaneExecutor:
         self.batch_shards = batch_shards
         self.lanes = lanes
         self.interpret = interpret
+        #: RaggedFuse under the mesh: one shard_map step per flush covers
+        #: every live group ("1 host read, 1 SPMD step, D slices"); the
+        #: numpy emulation books the identical accounting.  Collection is
+        #: double-buffered against the next round's host decode (ROADMAP
+        #: mesh item (c)).
+        self.ragged = bool(ragged)
 
     def run(
         self,
@@ -661,6 +856,9 @@ class MeshLaneExecutor:
         groups: Sequence[GroupDispatch],
         stats: Optional[ExecStats] = None,
     ) -> Iterator[Tuple[int, ExecResult]]:
+        if self.ragged:
+            yield from self._run_groups_ragged(loaded, groups, stats)
+            return
         n_dev = self.partition.n_dev
         bufs: List[List[LoadedShard]] = [[] for _ in range(n_dev)]
         for ls in loaded:
@@ -671,6 +869,124 @@ class MeshLaneExecutor:
                 bufs = [[] for _ in range(n_dev)]
         if any(bufs):
             yield from self._flush(bufs, groups, stats)
+
+    def _run_groups_ragged(self, loaded, groups, stats):
+        """One SPMD step (or emulated round) per flush for ALL groups, with
+        batch ``i``'s collect deferred until batch ``i+1``'s dispatch is in
+        flight — the mesh double-buffer (DESIGN.md §14)."""
+        live = [(gi, ga) for gi, ga in enumerate(groups) if ga is not None]
+        if not live:
+            for _ in loaded:
+                pass
+            return
+        n_dev = self.partition.n_dev
+        lane_ctx = None  # staged on first jax flush, reused across rounds
+        k_total = sum(int(ga[0].shape[0]) for _, ga in live)
+        if self.backend_name != "numpy":
+            from repro.kernels.spmv_ell import ops as spmv_ops
+
+        def dispatch(bufs):
+            nonlocal lane_ctx
+            t0 = time.perf_counter()
+            total = sum(len(b) for b in bufs)
+            with trace.span(
+                "exec.dispatch",
+                groups=len(live),
+                shards=total,
+                devices=sum(1 for b in bufs if b),
+                backend=self.backend_name,
+                ragged=True,
+            ):
+                if self.backend_name == "numpy":
+                    fn = LANE_BACKENDS["numpy"]
+                    results = []
+                    for gi, (msgs, combine) in live:
+                        for buf in bufs:
+                            for ls in buf:
+                                acc = np.asarray(
+                                    fn(ls.csr, ls.ell, msgs, combine)
+                                )
+                                results.append((gi, ls, acc, len(buf)))
+                    handle = ("numpy", results, None)
+                else:
+                    if lane_ctx is None:
+                        ell = next(ls.ell for b in bufs for ls in b)
+                        lane_ctx = spmv_ops.mesh_ragged_stage_lanes(
+                            [ga[0] for _, ga in live],
+                            [ga[1] for _, ga in live],
+                            ell.num_windows * ell.window, n_dev,
+                        )
+                    h = spmv_ops.mesh_ragged_dispatch(
+                        [[ls.ell for ls in buf] for buf in bufs], lane_ctx,
+                        mesh=self.mesh, backend=self.backend_name,
+                        interpret=self.interpret,
+                    )
+                    handle = ("mesh", h, list(bufs))
+            if stats is not None:
+                stats.dispatches += 1
+                stats.ragged_dispatches += 1
+                stats.batches += 1
+                stats.shards_executed += total * len(live)
+                stats.ragged_lanes += k_total
+                for gi, ga in live:
+                    stats.group_lanes[gi] = (
+                        stats.group_lanes.get(gi, 0) + int(ga[0].shape[0])
+                    )
+                for d, buf in enumerate(bufs):
+                    if buf:
+                        stats.device_shards[d] = (
+                            stats.device_shards.get(d, 0)
+                            + len(buf) * len(live)
+                        )
+                        stats.device_dispatches[d] = (
+                            stats.device_dispatches.get(d, 0) + 1
+                        )
+                stats.exec_s += time.perf_counter() - t0
+            return handle, time.perf_counter()
+
+        def collect(p):
+            handle, t_launch = p
+            if stats is not None:
+                stats.overlap_s += time.perf_counter() - t_launch
+            t0 = time.perf_counter()
+            kind, payload, bufs = handle
+            if kind == "numpy":
+                results = payload
+            else:
+                results = []
+                if payload is not None:
+                    accs_by_group, _ = spmv_ops.mesh_ragged_collect(payload)
+                    for (gi, _), accs_dev in zip(live, accs_by_group):
+                        for buf, accs in zip(bufs, accs_dev):
+                            for ls, acc in zip(buf, accs):
+                                results.append(
+                                    (gi, ls, np.asarray(acc), len(buf))
+                                )
+            if stats is not None:
+                stats.exec_s += time.perf_counter() - t0
+            for gi, ls, acc, bs in results:
+                ref = ls.ref
+                yield gi, ExecResult(ls.shard_id, ref.v0, ref.v1, acc,
+                                     batch_size=bs)
+
+        pending = None
+        bufs: List[List[LoadedShard]] = [[] for _ in range(n_dev)]
+        for ls in loaded:
+            d = self.partition.device_of(ls.shard_id)
+            bufs[d].append(ls)
+            if len(bufs[d]) >= self.batch_shards:
+                nxt = dispatch(bufs)
+                bufs = [[] for _ in range(n_dev)]
+                if pending is not None:
+                    yield from collect(pending)
+                pending = nxt
+        if any(bufs):
+            nxt = dispatch(bufs)
+            if pending is not None:
+                yield from collect(pending)
+            pending = nxt
+        if pending is not None:
+            yield from collect(pending)
 
     def _flush(self, bufs, groups, stats):
         live = [(gi, ga) for gi, ga in enumerate(groups) if ga is not None]
@@ -712,6 +1028,7 @@ class MeshLaneExecutor:
             # numpy emulation books the same way so accounting is
             # backend-invariant (fig_mesh asserts conservation on it).
             stats.dispatches += len(live)
+            stats.batches += 1
             stats.shards_executed += total * len(live)
             for d, buf in enumerate(bufs):
                 if buf:
@@ -738,11 +1055,16 @@ def make_executor(backend: str, *, batch_shards: int = 1):
     return PerShardExecutor(backend)
 
 
-def make_lane_executor(backend: str, *, batch_shards: int = 1):
+def make_lane_executor(backend: str, *, batch_shards: int = 1,
+                       ragged: bool = True):
     """Executor whose dispatches carry a lane (concurrent-query) axis:
-    same selection rule as :func:`make_executor`."""
+    same selection rule as :func:`make_executor`, except that ``ragged``
+    (the RaggedFuse one-launch path, on by default) also wants the batched
+    executor at ``batch_shards=1`` — a ragged flush is still 1 launch where
+    the per-shard path would pay G."""
     if batch_shards < 1:
         raise ValueError("batch_shards must be >= 1")
-    if batch_shards > 1 and backend in _BATCHED_LANE_BACKENDS:
-        return BatchedEllExecutor(backend, batch_shards, lanes=True)
+    if backend in _BATCHED_LANE_BACKENDS and (batch_shards > 1 or ragged):
+        return BatchedEllExecutor(backend, batch_shards, lanes=True,
+                                  ragged=ragged)
     return PerShardExecutor(backend, lanes=True)

@@ -94,6 +94,74 @@ def ell_partials_masked(
     )(tile_window, ell_idx, ell_valid, msgs)
 
 
+# --------------------------------------------------------------- ragged
+def _ragged_kernel(combines, tile_window_ref, combine_ids_ref, idx_ref,
+                   valid_ref, msgs_ref, out_ref):
+    """One (TR, K) tile of ONE lane: gather once, reduce per combine arm,
+    keep the arm this lane's ``combine_id`` selects.
+
+    ``jnp.where`` returns the selected arm's value bit-for-bit, so each lane
+    is op-for-op identical to a solo ``_masked_kernel`` launch with its own
+    combine — the bitwise contract survives the fusion.  Padding lanes carry
+    an out-of-range id that matches no arm and stay at the zero init.
+    """
+    table = msgs_ref[...][0]  # [window] this lane's resident source slice
+    idx = idx_ref[...].astype(jnp.int32)  # [TR, K] window-local indices
+    g = jnp.take(table, idx, axis=0, mode="clip")  # shared across arms
+    cid = combine_ids_ref[pl.program_id(0)]
+    out = jnp.zeros((idx.shape[0],), g.dtype)
+    for ci, combine in enumerate(combines):
+        ident = jnp.asarray(IDENTITY[combine], g.dtype)
+        gc = jnp.where(valid_ref[...], g, ident)
+        out = jnp.where(cid == ci, _reduce(gc, combine), out)
+    out_ref[...] = out[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tr", "combines", "interpret")
+)
+def ell_partials_ragged(
+    ell_idx: jax.Array,  # [n_ell, K] int16/int32 window-local
+    ell_valid: jax.Array,  # [n_ell, K] bool
+    tile_window: jax.Array,  # [n_tiles] int32
+    combine_ids: jax.Array,  # [n_lanes] int32 arm index per lane
+    msgs: jax.Array,  # [n_lanes, num_windows * window] ragged lane state
+    *,
+    window: int,
+    tr: int,
+    combines: tuple,  # deduplicated combine arms, static
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-ELL-row partials for ALL lanes of ALL fusion groups, [n_lanes,
+    n_ell] — ONE launch where the multi path pays G (DESIGN.md §14).
+
+    The grid grows a leading lane dimension; a second prefetched scalar
+    vector carries each lane's combine-arm id so the selection happens
+    in-kernel instead of at launch granularity.
+    """
+    n_ell, k = ell_idx.shape
+    n_tiles = n_ell // tr
+    n_lanes = msgs.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_lanes, n_tiles),
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda l, i, tw, cid: (i, 0)),
+            pl.BlockSpec((tr, k), lambda l, i, tw, cid: (i, 0)),
+            # Sliding window per lane: one (1, W) slice of this lane's
+            # message row resident per grid step.
+            pl.BlockSpec((1, window), lambda l, i, tw, cid: (l, tw[i])),
+        ],
+        out_specs=pl.BlockSpec((1, tr), lambda l, i, tw, cid: (l, i)),
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, combines),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_lanes, n_ell), msgs.dtype),
+        interpret=interpret,
+    )(tile_window, combine_ids, ell_idx, ell_valid, msgs)
+
+
 # -------------------------------------------------------------- sentinel
 def _sentinel_kernel(combine: str, tile_window_ref, idx_ref, msgs_ref, out_ref):
     """No mask plane: padding slots index the identity slot of the table."""

@@ -29,6 +29,7 @@ from repro.core.csr import (
     concat_ells,
     next_pow2,
     pad_ell_arrays,
+    ragged_lane_concat,
 )
 
 from . import kernel as K
@@ -276,6 +277,112 @@ def ell_update_lanes_multi(
     return out
 
 
+@functools.partial(
+    jax.jit, static_argnames=("window", "tr", "rows", "combines", "interpret")
+)
+def _update_lanes_ragged_jit(
+    ell_idx, ell_valid, seg, tile_window, combine_ids, msgs2d,
+    *, window, tr, rows, combines, interpret,
+):
+    """RaggedFuse update: ONE pallas launch covers every fusion group.
+
+    ``msgs2d`` is the concatenated ``[k_pad, n_pad_v]`` lane state of ALL
+    groups; ``combine_ids`` names each lane's combine arm.  The ragged
+    partials kernel gathers once per tile and selects the arm in-kernel;
+    the segment combine runs once per arm with the selected rows kept via
+    ``jnp.where`` — each lane's value is op-for-op what
+    :func:`_update_lanes_jit` computes for its group alone, so the bitwise
+    contract of the multi path is preserved (DESIGN.md §14).
+    """
+    part = K.ell_partials_ragged(
+        ell_idx, ell_valid, tile_window, combine_ids, msgs2d,
+        window=window, tr=tr, combines=combines, interpret=interpret,
+    )
+    acc = jnp.zeros((msgs2d.shape[0], rows), msgs2d.dtype)
+    for ci, combine in enumerate(combines):
+        acc_c = jax.vmap(
+            lambda p, c=combine: _segment_combine(p, seg, rows, c)
+        )(part)
+        acc = jnp.where((combine_ids == ci)[:, None], acc_c, acc)
+    return acc
+
+
+def ragged_stage_lanes(msgs_by_group, combines: Sequence[str], n_pad_v: int):
+    """Stage the lane side of a ragged launch to device ONCE.
+
+    Lane values are fixed within a sweep iteration, so the executor caches
+    this across shard batches — the per-group pad+copy the multi path pays
+    on every flush is paid once per iteration instead (ISSUE 10 satellite).
+    """
+    msgs_all, cids, combines_set, slices = ragged_lane_concat(
+        msgs_by_group, combines, n_cols=n_pad_v
+    )
+    return {
+        "msgs": jnp.asarray(msgs_all),
+        "cids": jnp.asarray(cids),
+        "combines": combines_set,
+        "slices": slices,
+        "k_total": int(sum(int(m.shape[0]) for m in msgs_by_group)),
+        "k_pad": int(msgs_all.shape[0]),
+    }
+
+
+def ragged_dispatch(ells: Sequence[EllShard], lane_ctx, *,
+                    interpret: bool = True):
+    """Launch ONE ragged update for a shard batch.
+
+    Returns ``(batch, acc)`` with ``acc`` an *unforced* device array, so
+    the caller can stage the next batch's host decode while this launch is
+    in flight (the double-buffer protocol, DESIGN.md §14)."""
+    batch, idx, mask, seg, tw = _prep_batch(ells)
+    acc = _update_lanes_ragged_jit(
+        jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(seg),
+        jnp.asarray(tw), lane_ctx["cids"], lane_ctx["msgs"],
+        window=batch.window, tr=batch.tr, rows=next_pow2(batch.rows_total),
+        combines=lane_ctx["combines"], interpret=interpret,
+    )
+    return batch, acc
+
+
+def ragged_collect(batch, acc, group_slices) -> List[List[np.ndarray]]:
+    """Force a ragged accumulator and slice it back per group per shard —
+    the same list-of-lists shape :func:`ell_update_lanes_multi` returns."""
+    acc = np.asarray(acc)  # blocks until the launch lands
+    return [batch.split(acc[sl]) for sl in group_slices]
+
+
+def ell_update_lanes_ragged(
+    ells: Sequence[EllShard],
+    msgs_by_group: Sequence[np.ndarray],  # each [K_g, |V|]
+    combines: Sequence[str],
+    *,
+    interpret: bool = True,
+) -> List[List[np.ndarray]]:
+    """Per-shard ``[K_g, rows]`` accumulators for N shards x G groups from
+    ONE ragged launch — the one-launch replacement for
+    :func:`ell_update_lanes_multi`'s G-dispatch loop (DESIGN.md §14).
+
+    Groups are concatenated along the lane axis with a per-lane combine-id
+    vector; the kernel selects the combine arm per lane, so dispatch count
+    per batch drops from G to 1 and lane padding is per-launch instead of
+    per-group-pow2 (never worse: see :func:`repro.core.csr.ragged_lane_pad`).
+    Bitwise-equal per group to the multi path.
+    """
+    if len(msgs_by_group) != len(combines):
+        raise ValueError("one combine per message group")
+    for msgs in msgs_by_group:
+        if msgs.ndim != 2:
+            raise ValueError(
+                f"lane update needs [lanes, |V|] messages, got {msgs.shape}"
+            )
+    if not ells:
+        return [[] for _ in msgs_by_group]
+    n_pad_v = ells[0].num_windows * ells[0].window
+    lane_ctx = ragged_stage_lanes(msgs_by_group, combines, n_pad_v)
+    batch, acc = ragged_dispatch(ells, lane_ctx, interpret=interpret)
+    return ragged_collect(batch, acc, lane_ctx["slices"])
+
+
 @functools.lru_cache(maxsize=32)
 def _mesh_lanes_jit(mesh, backend, window, tr, rows, combine, interpret):
     """One mesh sweep dispatch: shard_map'd lane update over a device axis.
@@ -442,6 +549,205 @@ def ell_update_lanes_mesh_multi(
         )
         touched_by_group.append(int(touched))
     return accs_by_group, touched_by_group
+
+
+@functools.lru_cache(maxsize=32)
+def _mesh_lanes_ragged_jit(mesh, backend, window, tr, rows, combines,
+                           interpret):
+    """RaggedFuse under the mesh: ONE shard_map step for ALL groups.
+
+    Same SPMD schedule as :func:`_mesh_lanes_jit` — per-device ELL block,
+    lane-state all-gather, single-device lane bodies — but the lane axis
+    carries every group at once with a replicated combine-id vector, and
+    the step computes each combine arm's accumulator then keeps the arm
+    each lane selects.  The per-backend bodies are EXACTLY the ones the
+    per-group mesh path vmaps, so each lane's accumulator is bitwise the
+    multi path's.  Padding lanes match no arm: their accumulator rows and
+    identity entries both stay zero, so the psum'd touched count (the SPMD
+    activity proxy) is unpolluted.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import graph_ctx
+
+    ctx = graph_ctx(mesh)
+    axes = tuple(mesh.axis_names)
+
+    if backend == "jnp":
+        from repro.core.executor import _ell_fn_impl
+
+        bodies = [_ell_fn_impl(tr, rows, window, c) for c in combines]
+    else:
+
+        def _mk(combine):
+            def body(ell_idx, ell_mask, seg, tile_window, msgs):
+                part = K.ell_partials_masked(
+                    ell_idx, ell_mask, tile_window, msgs,
+                    window=window, tr=tr, combine=combine,
+                    interpret=interpret,
+                )
+                return _segment_combine(part, seg, rows, combine)
+
+            return body
+
+        bodies = [_mk(c) for c in combines]
+
+    def step(idx, mask, seg, tw, cids, msgs_local):
+        idx, mask, seg, tw = idx[0], mask[0], seg[0], tw[0]
+        msgs = jax.lax.all_gather(msgs_local, axes, axis=1, tiled=True)
+        acc = jnp.zeros((msgs.shape[0], rows), msgs.dtype)
+        ident_vec = jnp.zeros((msgs.shape[0],), msgs.dtype)
+        for ci, combine in enumerate(combines):
+            acc_c = jax.vmap(bodies[ci], in_axes=(None, None, None, None, 0))(
+                idx, mask, seg, tw, msgs
+            )
+            sel = cids == ci
+            acc = jnp.where(sel[:, None], acc_c, acc)
+            ident_vec = jnp.where(
+                sel, jnp.asarray(IDENTITY[combine], msgs.dtype), ident_vec
+            )
+        touched = jax.lax.psum((acc != ident_vec[:, None]).sum(), axes)
+        return acc[None], touched
+
+    in_specs = (
+        ctx.spec("device", None, None),  # ell_idx   [D, n_ell, K]
+        ctx.spec("device", None, None),  # ell_mask  [D, n_ell, K]
+        ctx.spec("device", None),        # seg       [D, n_ell]
+        ctx.spec("device", None),        # tile_window [D, n_tiles]
+        ctx.spec("lane"),                # combine_ids [k_pad] replicated
+        ctx.spec("lane", "vertex"),      # msgs      [k_pad, n_pad_dev]
+    )
+    out_specs = (ctx.spec("device", "lane", None), P())
+    fn = shard_map(
+        step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+    return jax.jit(
+        fn,
+        in_shardings=tuple(NamedSharding(mesh, s) for s in in_specs),
+        out_shardings=tuple(NamedSharding(mesh, s) for s in out_specs),
+    )
+
+
+def mesh_ragged_stage_lanes(msgs_by_group, combines: Sequence[str],
+                            n_pad_v: int, n_dev: int):
+    """Mesh variant of :func:`ragged_stage_lanes`: the vertex axis is
+    additionally padded to a multiple of ``n_dev`` so it shards evenly (the
+    tail past ``n_pad_v`` is never addressed by a valid slot)."""
+    n_pad_dev = -(-n_pad_v // n_dev) * n_dev
+    return ragged_stage_lanes(msgs_by_group, combines, n_pad_dev)
+
+
+def mesh_ragged_dispatch(
+    device_ells: Sequence[Sequence[EllShard]],  # [D] lists, device order
+    lane_ctx,
+    *,
+    mesh,
+    backend: str = "pallas",
+    interpret: bool = True,
+):
+    """Launch ONE SPMD step covering every group for this device round.
+
+    Returns an opaque handle for :func:`mesh_ragged_collect`; the
+    accumulator is left unforced so the caller can stage the next round's
+    host decode while the step is in flight.  ``None`` when every device's
+    shard list is empty.
+    """
+    n_dev = int(np.prod(mesh.devices.shape))
+    if len(device_ells) != n_dev:
+        raise ValueError(
+            f"device_ells has {len(device_ells)} slots for a {n_dev}-device mesh"
+        )
+    batches = {
+        d: _prep_batch(ells)
+        for d, ells in enumerate(device_ells)
+        if len(ells)
+    }
+    if not batches:
+        return None
+    first = next(iter(batches.values()))[0]
+    window, tr, k = first.window, first.tr, first.k
+    n_ell_pad = bucket_rows(max(t[1].shape[0] for t in batches.values()), tr)
+    rows_pad = next_pow2(max(t[0].rows_total for t in batches.values()))
+
+    idx_all = np.zeros((n_dev, n_ell_pad, k), dtype=first.ell_idx.dtype)
+    mask_all = np.zeros((n_dev, n_ell_pad, k), dtype=bool)
+    seg_all = np.zeros((n_dev, n_ell_pad), dtype=np.int32)
+    tw_all = np.zeros((n_dev, n_ell_pad // tr), dtype=np.int32)
+    for d, (batch, idx, mask, seg, tw) in batches.items():
+        idx, mask, seg, tw = pad_ell_arrays(
+            idx, mask, seg, tw, idx.shape[0], tr, n_ell_pad
+        )
+        idx_all[d], mask_all[d], seg_all[d], tw_all[d] = idx, mask, seg, tw
+
+    fn = _mesh_lanes_ragged_jit(
+        mesh, backend, window, tr, rows_pad, lane_ctx["combines"], interpret
+    )
+    acc_all, touched = fn(
+        jnp.asarray(idx_all), jnp.asarray(mask_all),
+        jnp.asarray(seg_all), jnp.asarray(tw_all),
+        lane_ctx["cids"], lane_ctx["msgs"],
+    )
+    return {
+        "batches": batches,
+        "n_dev": n_dev,
+        "acc": acc_all,
+        "touched": touched,
+        "slices": lane_ctx["slices"],
+    }
+
+
+def mesh_ragged_collect(handle):
+    """Force a mesh ragged handle into ``(accs_by_group, touched_total)``
+    where ``accs_by_group[g][d]`` lists per-shard ``[K_g, rows]``
+    accumulators (empty for idle devices)."""
+    acc_all = np.asarray(handle["acc"])
+    batches, n_dev = handle["batches"], handle["n_dev"]
+    accs_by_group = [
+        [
+            batches[d][0].split(acc_all[d][sl]) if d in batches else []
+            for d in range(n_dev)
+        ]
+        for sl in handle["slices"]
+    ]
+    return accs_by_group, int(handle["touched"])
+
+
+def ell_update_lanes_mesh_ragged(
+    device_ells: Sequence[Sequence[EllShard]],
+    msgs_by_group: Sequence[np.ndarray],  # each [K_g, |V|]
+    combines: Sequence[str],
+    *,
+    mesh,
+    backend: str = "pallas",
+    interpret: bool = True,
+):
+    """Mesh RaggedFuse entry point: 1 host read, ONE SPMD step, D device
+    slices — where :func:`ell_update_lanes_mesh_multi` pays G steps.
+
+    Returns ``(accs_by_group, touched_total)``; accumulators are bitwise
+    the multi path's per group.  ``touched_total`` is one psum over all
+    groups (the per-launch activity proxy replaces the per-group one).
+    """
+    if len(msgs_by_group) != len(combines):
+        raise ValueError("one combine per message group")
+    for msgs in msgs_by_group:
+        if msgs.ndim != 2:
+            raise ValueError(
+                f"lane update needs [lanes, |V|] messages, got {msgs.shape}"
+            )
+    n_dev = int(np.prod(mesh.devices.shape))
+    first = next((ells[0] for ells in device_ells if len(ells)), None)
+    if first is None:
+        return [[[] for _ in device_ells] for _ in msgs_by_group], 0
+    lane_ctx = mesh_ragged_stage_lanes(
+        msgs_by_group, combines, first.num_windows * first.window, n_dev
+    )
+    handle = mesh_ragged_dispatch(
+        device_ells, lane_ctx, mesh=mesh, backend=backend, interpret=interpret
+    )
+    return mesh_ragged_collect(handle)
 
 
 def ell_update_arrays(

@@ -500,7 +500,38 @@ def _ingest_pipeline(reg: MetricsRegistry, s: Any, prefix: Optional[str]) -> Non
 
 def _ingest_exec(reg: MetricsRegistry, s: Any, prefix: Optional[str]) -> None:
     p = prefix or "exec"
-    reg._bump(p, s, ("dispatches", "shards_executed", "exec_s"))
+    reg._bump(
+        p,
+        s,
+        (
+            "dispatches",
+            "batches",
+            "ragged_dispatches",
+            "ragged_lanes",
+            "overlap_s",
+            "shards_executed",
+            "exec_s",
+        ),
+    )
+    # RaggedFuse conservation (DESIGN.md §14): a ragged flush is exactly one
+    # dispatch per batch, and the ragged lane axis is the disjoint union of
+    # the per-group lane blocks.
+    reg.check(
+        f"{p}: ragged_dispatches <= batches",
+        min(s.ragged_dispatches, s.batches),
+        s.ragged_dispatches,
+    )
+    reg.check(
+        f"{p}: batches <= dispatches",
+        min(s.batches, s.dispatches),
+        s.batches,
+    )
+    if s.group_lanes:
+        reg.check(
+            f"{p}: sum(group_lanes) == ragged_lanes",
+            sum(s.group_lanes.values()),
+            s.ragged_lanes,
+        )
     if s.device_shards:
         reg.check(
             f"{p}: sum(device_shards) == shards_executed",
@@ -576,11 +607,21 @@ def _ingest_sweep_iter(reg: MetricsRegistry, s: Any, prefix: Optional[str]) -> N
             "load_total_s",
             "load_wait_s",
             "exec_s",
+            "dispatches",
+            "batches",
+            "overlap_s",
         ),
     )
     reg.histogram(f"{p}.time_s").record(s.time_s)
     reg.gauge(f"{p}.live_lanes").set(s.live_lanes)
     reg.gauge(f"{p}.groups").set(s.groups)
+    # RaggedFuse (DESIGN.md §14): every flushed batch costs at least one
+    # dispatch; the ragged path makes it exactly one.
+    reg.check(
+        f"{p}[{s.iteration}]: batches <= dispatches",
+        min(s.batches, s.dispatches),
+        s.batches,
+    )
     _device_conservation(reg, s, p, None)
 
 

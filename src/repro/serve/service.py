@@ -159,6 +159,7 @@ class GraphService:
         auto_compact_runs: Optional[int] = None,
         max_groups: int = 2,
         fuse_programs: bool = True,
+        ragged: bool = True,
     ):
         self.engine = engine
         self.batcher = LaneBatcher(
@@ -170,6 +171,9 @@ class GraphService:
         self.max_pending = max_pending
         self.graph_version = graph_version
         self.lane_selective = lane_selective
+        # RaggedFuse (DESIGN.md §14): one ragged kernel launch per shard
+        # batch covers every fusion group (jnp/pallas lane executors).
+        self.ragged = ragged
         # Set by ``from_store(warm_state=...)``: the apply_warm_state
         # report (None = no warm restore was attempted).
         self.warm_restore_report: Optional[Dict[str, Any]] = None
@@ -244,6 +248,7 @@ class GraphService:
         "auto_compact_runs",
         "max_groups",
         "fuse_programs",
+        "ragged",
     )
 
     @classmethod
@@ -591,6 +596,7 @@ class GraphService:
             batch_shards=self.batch_shards,
             pad_pow2=self.batcher.pad_pow2,
             lane_selective=self.lane_selective,
+            ragged=self.ragged,
         )
         try:
             with trace.span(

@@ -116,6 +116,15 @@ class SweepIterStats:
     exec_s: float = 0.0
     # fusion: program groups live this iteration (1 for plain lane sweeps)
     groups: int = 1
+    # RaggedFuse (DESIGN.md §14): kernel dispatches and shard batches this
+    # iteration.  Ragged sweeps hold dispatches == batches (one launch per
+    # batch covers every group); the multi path pays groups x batches.
+    # Conservation: batches <= dispatches.
+    dispatches: int = 0
+    batches: int = 0
+    # double-buffer overlap: wall time launches stayed in flight while the
+    # host staged the next batch.
+    overlap_s: float = 0.0
     # mesh sweeps (DESIGN.md §10); empty tuples on single-device sweeps.
     # Conserved like IterStats': sum(device_shards) == shards_processed,
     # sum(device_bytes) == bytes_read — one host read per shard, sliced
@@ -311,6 +320,7 @@ class FusedSweep:
         batch_shards: int = 1,
         pad_pow2: bool = True,
         lane_selective: bool = True,
+        ragged: bool = True,
     ):
         self.engine = engine
         self.pad_pow2 = pad_pow2
@@ -320,18 +330,24 @@ class FusedSweep:
         # masked (the shard still loads once).  Same bitwise argument as
         # whole-shard skipping, per lane (DESIGN.md §6).
         self.lane_selective = lane_selective
+        # RaggedFuse (DESIGN.md §14): the jnp/pallas lane executors
+        # concatenate every live group along the lane axis and launch ONE
+        # ragged kernel per shard batch (instead of G), double-buffering
+        # collection against the next batch's decode.  Bitwise-identical
+        # per group; the numpy oracle always runs per-group.
+        self.ragged = ragged
         # An engine booted with ``mesh=`` carries a MeshPartition: lane
         # dispatch then routes each decoded shard to its owning device and
-        # launches one SPMD program per live group — "1 host read, G x D
+        # launches one SPMD program per flush — "1 host read, G x D
         # slices" (DESIGN.md §10).  Same run_groups surface either way.
         if getattr(engine, "partition", None) is not None:
             self.executor = MeshLaneExecutor(
                 engine.backend_name, engine.partition, engine.mesh,
-                batch_shards=batch_shards, lanes=True,
+                batch_shards=batch_shards, lanes=True, ragged=ragged,
             )
         else:
             self.executor = make_lane_executor(
-                engine.backend_name, batch_shards=batch_shards
+                engine.backend_name, batch_shards=batch_shards, ragged=ragged
             )
         self.iter_stats: List[SweepIterStats] = []
 
@@ -523,6 +539,9 @@ class FusedSweep:
                             load_wait_s=pstats.wait_s,
                             exec_s=xstats.exec_s,
                             groups=n_groups_live,
+                            dispatches=xstats.dispatches,
+                            batches=xstats.batches,
+                            overlap_s=xstats.overlap_s,
                             device_shards=dev_shards,
                             device_dispatches=dev_disp,
                             device_bytes=dev_bytes,
@@ -559,11 +578,17 @@ class FusedSweep:
         Message sub-matrices are padded to pow2 lane counts (same shape
         discipline as the batcher) so jit'd lane kernels see bounded
         shapes; padding rows are zeros and their results are discarded.
+        Staged sub-matrices are cached per (group, lane mask) for the
+        iteration — consecutive flushes with a recurring mask reuse the
+        padded copy instead of re-staging it (ISSUE 10 satellite; lane
+        values are fixed within the iteration, and the cache dies with the
+        call, so retirement/backfill invalidate it for free).
         """
         batch = getattr(self.executor, "batch_shards", 1)
         rows_skipped = 0
         buf: List = []
         buf_mask: Optional[np.ndarray] = None
+        staged: Dict[Tuple[int, bytes], np.ndarray] = {}
 
         def flush() -> None:
             nonlocal buf, buf_mask, rows_skipped
@@ -572,7 +597,7 @@ class FusedSweep:
             groups_args: List[Optional[Tuple[np.ndarray, str]]] = []
             group_slots: List[Optional[np.ndarray]] = []
             offset = 0
-            for t, sl, m in zip(tables, group_live, msgs):
+            for gi, (t, sl, m) in enumerate(zip(tables, group_live, msgs)):
                 sub = buf_mask[offset:offset + len(sl)]
                 offset += len(sl)
                 dsl = sl[sub] if len(sl) else sl
@@ -581,10 +606,14 @@ class FusedSweep:
                     groups_args.append(None)
                     group_slots.append(None)
                     continue
-                k = len(dsl)
-                cap_sub = pad_lanes(k) if self.pad_pow2 else k
-                subm = np.zeros((cap_sub, m.shape[1]), dtype=m.dtype)
-                subm[:k] = m[dsl]
+                key = (gi, dsl.tobytes())
+                subm = staged.get(key)
+                if subm is None:
+                    k = len(dsl)
+                    cap_sub = pad_lanes(k) if self.pad_pow2 else k
+                    subm = np.zeros((cap_sub, m.shape[1]), dtype=m.dtype)
+                    subm[:k] = m[dsl]
+                    staged[key] = subm
                 groups_args.append((subm, t.combine))
                 group_slots.append(dsl)
             for gi, res in self.executor.run_groups(
@@ -650,6 +679,7 @@ class LaneSweep:
         batch_shards: int = 1,
         pad_pow2: bool = True,
         lane_selective: bool = True,
+        ragged: bool = True,
     ):
         self.engine = engine
         self.program = program
@@ -658,6 +688,7 @@ class LaneSweep:
             batch_shards=batch_shards,
             pad_pow2=pad_pow2,
             lane_selective=lane_selective,
+            ragged=ragged,
         )
 
     @property

@@ -1,0 +1,385 @@
+"""RaggedFuse: one ragged kernel launch per shard batch covering ALL
+fusion groups (DESIGN.md §14).
+
+The ragged contract, tested four ways:
+
+1. **Padding algebra** — :func:`ragged_lane_pad` never wastes more lanes
+   than the per-group power-of-two padding the multi-launch path pays,
+   and :func:`ragged_lane_concat` lays groups out contiguously with
+   per-lane combine-arm ids (padding lanes carry an id matching NO arm).
+2. **Bitwise kernels** — ``ell_update_lanes_ragged`` equals
+   ``ell_update_lanes_multi`` bit-for-bit per group across combine mixes
+   (including duplicated monoids sharing one arm and inf-heavy min
+   inputs), and the mesh variant equals the mesh multi path at D ∈
+   {1, 2, 8} (numpy emulation inline; jnp/pallas in a subprocess under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+3. **Bitwise sweeps** — a ``FusedSweep(ragged=True)`` reproduces the
+   ``ragged=False`` multi-path results exactly through masked groups
+   (lane-selective scheduling), mid-sweep retirement and backfill.
+4. **Conserved accounting** — a ragged sweep books exactly ONE dispatch
+   per flushed batch (``dispatches == batches``) where the multi path
+   pays ``groups`` per batch, and the declared identities
+   (``ragged_dispatches <= batches <= dispatches``,
+   ``sum(group_lanes) == ragged_lanes``) replay clean through
+   ``MetricsRegistry.verify_conservation``.
+
+jax-touching tests carry ``e2e`` in their names so the RLIMIT_AS runner
+(run_memcapped.py) can exclude them.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import apps
+from repro.core.csr import (
+    csr_to_ell,
+    next_pow2,
+    ragged_lane_concat,
+    ragged_lane_pad,
+)
+from repro.core.graph import chain_graph, rmat_graph
+from repro.core.sharding import preprocess
+from repro.core.vsw import VSWEngine
+from repro.serve import FusedSweep, GraphService, LaneSeed
+
+MIXED = [("bfs", 0), ("ppr", 5), ("sssp", 3), ("ppr", 11), ("wcc", 1)]
+
+
+def _norm(v):
+    return np.nan_to_num(v, posinf=1e30, neginf=-1e30)
+
+
+def _mk_engine(tmp_path, tag, g, **kw):
+    kw.setdefault("num_shards", 6)
+    kw.setdefault("window", 128)
+    kw.setdefault("k", 16)
+    return VSWEngine.from_graph(g, str(tmp_path / tag), **kw)
+
+
+def _mk_service(tmp_path, tag, g, **kw):
+    kw.setdefault("num_shards", 6)
+    kw.setdefault("window", 128)
+    kw.setdefault("k", 16)
+    return GraphService.from_graph(g, str(tmp_path / tag), **kw)
+
+
+def _solo(eng, program, source, max_iters):
+    kw = {} if program == "wcc" else {"source": source}
+    return eng.run(apps.get_program(program, **kw), max_iters=max_iters)
+
+
+# ------------------------------------------------------- padding algebra
+def test_ragged_lane_pad_never_worse_than_per_group_pow2():
+    """Property (seeded): for ANY group lane counts, the single ragged
+    launch's padding waste <= the multi path's per-group pow2 waste."""
+    rng = np.random.default_rng(140)
+    for _ in range(300):
+        counts = rng.integers(0, 33, size=rng.integers(1, 7)).tolist()
+        k_total = sum(counts)
+        pad = ragged_lane_pad(counts)
+        per_group = sum(next_pow2(max(k, 1)) for k in counts)
+        assert pad >= max(k_total, 1)
+        assert pad <= per_group, (counts, pad, per_group)
+        # ragged waste <= per-group waste (the acceptance inequality)
+        assert pad - k_total <= per_group - k_total
+    # the two interesting corners from DESIGN.md §14
+    assert ragged_lane_pad([1, 1, 1]) == 3  # beats next_pow2(3) == 4
+    assert ragged_lane_pad([3, 2, 5]) == 14  # == 4+2+8, beats pow2(10)=16
+
+
+def test_ragged_lane_concat_layout_and_arm_dedup():
+    rng = np.random.default_rng(141)
+    groups = [rng.random((k, 10)).astype(np.float32) for k in (3, 1, 2)]
+    msgs_all, cids, combines_set, slices = ragged_lane_concat(
+        groups, ["sum", "min", "sum"]
+    )
+    # duplicate monoids share ONE kernel arm, first-seen order
+    assert combines_set == ("sum", "min")
+    assert msgs_all.shape[0] == ragged_lane_pad([3, 1, 2])
+    # every group's lane block round-trips bitwise through its slice
+    for m, sl in zip(groups, slices):
+        assert np.array_equal(msgs_all[sl], m)
+    assert np.asarray(cids)[slices[0]].tolist() == [0, 0, 0]
+    assert np.asarray(cids)[slices[1]].tolist() == [1]
+    assert np.asarray(cids)[slices[2]].tolist() == [0, 0]
+    # padding lanes: zero rows, arm id out of range (matches no arm)
+    n_live = sum(m.shape[0] for m in groups)
+    assert np.all(msgs_all[n_live:] == 0.0)
+    assert np.all(np.asarray(cids)[n_live:] == len(combines_set))
+    with pytest.raises(ValueError):
+        ragged_lane_concat(groups, ["sum", "min"])
+    with pytest.raises(ValueError):
+        ragged_lane_concat([], [])
+
+
+# ------------------------------------------------------- kernel bitwise
+@pytest.mark.parametrize("combines", [
+    ("sum", "min", "max"),
+    ("min", "sum"),
+    ("sum", "min", "sum"),   # duplicated monoid -> shared arm
+    ("min",),                # single group: ragged degenerates to multi
+])
+def test_ragged_ops_bitwise_vs_multi_e2e(combines):
+    from repro.kernels.spmv_ell import ops as spmv_ops
+
+    g = rmat_graph(600, 7000, seed=142)
+    meta, shards = preprocess(g, num_shards=3)
+    ells = [csr_to_ell(s, g.num_vertices, window=128, k=16, tr=8)
+            for s in shards]
+    rng = np.random.default_rng(142)
+    msgs_by_group = []
+    for gi, c in enumerate(combines):
+        m = rng.random((gi + 1, g.num_vertices)).astype(np.float32)
+        if c in ("min", "max"):
+            # inf-heavy lanes: the min/max identity must survive the
+            # in-kernel arm selection exactly as it does solo
+            m[m > 0.6] = np.inf if c == "min" else -np.inf
+        msgs_by_group.append(m)
+    ref = spmv_ops.ell_update_lanes_multi(ells, msgs_by_group, list(combines))
+    out = spmv_ops.ell_update_lanes_ragged(ells, msgs_by_group, list(combines))
+    assert len(out) == len(ref) == len(combines)
+    for gi, (accs_r, accs_m) in enumerate(zip(out, ref)):
+        assert len(accs_r) == len(accs_m) == len(ells)
+        for si, (a, b) in enumerate(zip(accs_r, accs_m)):
+            assert a.shape == b.shape
+            assert np.array_equal(_norm(a), _norm(b)), (gi, si)
+    # empty shard list: shape-compatible empty result
+    assert spmv_ops.ell_update_lanes_ragged([], msgs_by_group,
+                                            list(combines)) == \
+        [[] for _ in combines]
+
+
+# -------------------------------------------------------- sweep bitwise
+@pytest.mark.parametrize("backend,batch_shards,lane_selective", [
+    ("jnp", 1, True), ("jnp", 3, True), ("pallas", 2, True),
+    ("jnp", 2, False),
+])
+def test_ragged_sweep_bitwise_vs_multi_e2e(tmp_path, backend, batch_shards,
+                                           lane_selective):
+    """FusedSweep(ragged=True) == FusedSweep(ragged=False) bitwise per
+    lane through masked groups and mid-sweep retirement/backfill — and
+    the ragged run books ONE dispatch per batch where multi pays G."""
+    g = rmat_graph(400, 4500, seed=143)
+    eng = _mk_engine(tmp_path, f"e{backend}{batch_shards}", g, num_shards=5,
+                     backend=backend, batch_shards=batch_shards)
+    bfs, sssp, ppr = apps.lane_bfs(), apps.lane_sssp(), apps.lane_ppr()
+    # varied max_iters force mid-sweep retirement; the backfill queue
+    # re-admits into freed lanes while the other group is still live
+    queue = [LaneSeed(source=9, max_iters=12, token="b2", program=bfs)]
+
+    def mk_seeds():
+        return [
+            [LaneSeed(source=0, max_iters=3, token="b0", program=bfs),
+             LaneSeed(source=3, max_iters=12, token="s0", program=sssp)],
+            [LaneSeed(source=5, max_iters=8, token="p0", program=ppr),
+             LaneSeed(source=11, max_iters=2, token="p1", program=ppr)],
+        ]
+
+    def mk_backfill(q):
+        def backfill(group, n_free):
+            if group != 0:
+                return []
+            out = q[:n_free]
+            del q[:n_free]
+            return out
+        return backfill
+
+    runs = {}
+    for ragged in (True, False):
+        sweep = FusedSweep(eng, batch_shards=batch_shards,
+                           lane_selective=lane_selective, ragged=ragged)
+        q = list(queue)
+        res = sweep.run(mk_seeds(), backfill=mk_backfill(q))
+        runs[ragged] = ({r.token: r for r in res}, sweep.iter_stats)
+    by_r, stats_r = runs[True]
+    by_m, stats_m = runs[False]
+    assert set(by_r) == set(by_m) == {"b0", "s0", "p0", "p1", "b2"}
+    for tok in by_m:
+        assert np.array_equal(_norm(by_r[tok].values),
+                              _norm(by_m[tok].values)), tok
+        assert by_r[tok].iterations == by_m[tok].iterations
+        assert by_r[tok].converged == by_m[tok].converged
+    # accounting: ragged == one launch per flushed batch, every iteration
+    assert sum(s.dispatches for s in stats_r) > 0
+    for s in stats_r:
+        assert s.dispatches == s.batches, s
+        assert s.overlap_s >= 0.0
+    # the multi path pays per live group: strictly more launches overall
+    assert sum(s.dispatches for s in stats_m) > \
+        sum(s.dispatches for s in stats_r)
+    if batch_shards > 1:  # batch_shards=1 multi runs per-shard (no batches)
+        assert sum(s.batches for s in stats_m) == \
+            sum(s.batches for s in stats_r)
+    eng.close()
+
+
+def test_ragged_service_mixed_workload_bitwise_e2e(tmp_path):
+    """Service-level: ragged on (default) vs off, mixed-algebra workload
+    with lane retirement — every query bitwise-equal to its solo run."""
+    g = rmat_graph(300, 3500, seed=144)
+    eng = _mk_engine(tmp_path, "ref", g, num_shards=5, backend="jnp")
+    refs = {c: _solo(eng, *c, 12) for c in MIXED}
+    eng.close()
+    for ragged in (True, False):
+        svc = _mk_service(tmp_path, f"svc{ragged}", g, num_shards=5,
+                          backend="jnp", max_lanes=8, max_groups=2,
+                          batch_shards=2, ragged=ragged)
+        with svc.submit_batch():
+            futs = [svc.submit(p, s, max_iters=12) for p, s in MIXED]
+        for c, f in zip(MIXED, futs):
+            qr = f.result(timeout=240)
+            assert np.array_equal(_norm(qr.values),
+                                  _norm(refs[c].values)), (ragged, c)
+        # futures resolve inside the sweep; the counter bumps at sweep end
+        deadline = time.monotonic() + 30
+        while svc.stats()["sweeps"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert svc.stats()["sweeps"] == 1
+        svc.close()
+
+
+# ------------------------------------------------------- mesh emulation
+@pytest.mark.parametrize("D", [1, 2, 8])
+def test_ragged_mesh_numpy_emulation_bitwise(tmp_path, D):
+    """The jax-free mesh emulation books ragged accounting (one dispatch
+    per flush) while staying bitwise vs the single-device numpy oracle."""
+    g = rmat_graph(300, 3000, seed=145)
+    eng = _mk_engine(tmp_path, f"m{D}", g, backend="numpy", mesh=D)
+    ref = _mk_engine(tmp_path, "mref", g, backend="numpy")
+    bfs, ppr = apps.lane_bfs(), apps.lane_ppr()
+    sweep = FusedSweep(eng, ragged=True)
+    res = sweep.run([
+        [LaneSeed(source=2, max_iters=10, token="b", program=bfs)],
+        [LaneSeed(source=7, max_iters=6, token="p", program=ppr)],
+    ])
+    by_tok = {r.token: r for r in res}
+    for tok, src, prog, iters in (("b", 2, "bfs", 10), ("p", 7, "ppr", 6)):
+        sr = _solo(ref, prog, src, iters)
+        assert np.array_equal(_norm(by_tok[tok].values), _norm(sr.values))
+    for s in sweep.iter_stats:
+        assert s.dispatches == s.batches
+        if s.device_dispatches:
+            assert sum(s.device_dispatches) >= s.dispatches
+    eng.close()
+    ref.close()
+
+
+# --------------------------------------------------- jax mesh subprocess
+_MESH_RAGGED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import tempfile
+    from repro.core.graph import rmat_graph
+    from repro.serve import GraphService
+
+    g = rmat_graph(300, 3500, seed=146)
+    cases = [("bfs", 2), ("ppr", 3), ("sssp", 1), ("ppr", 9)]
+    norm = lambda v: np.nan_to_num(v, posinf=1e30)
+    with tempfile.TemporaryDirectory() as d:
+        for backend in ("jnp", "pallas"):
+            solo = GraphService.from_graph(
+                g, d + f"/solo{backend}", num_shards=6, window=128, k=16,
+                backend=backend, max_lanes=8, max_groups=2, batch_shards=2,
+                ragged=False)
+            refs = {c: solo.query(*c, max_iters=12).values for c in cases}
+            solo.close()
+            for D in (1, 2, 8):
+                svc = GraphService.from_graph(
+                    g, d + f"/{backend}{D}", num_shards=6, window=128,
+                    k=16, backend=backend, max_lanes=8, max_groups=2,
+                    batch_shards=2, mesh=D, ragged=True)
+                with svc.submit_batch():
+                    futs = [svc.submit(p, s, max_iters=12)
+                            for p, s in cases]
+                for c, f in zip(cases, futs):
+                    qr = f.result(timeout=240)
+                    assert np.array_equal(norm(qr.values),
+                                          norm(refs[c])), (backend, D, c)
+                svc.close()
+                print(backend, "D", D, "ragged-bitwise-ok", flush=True)
+    print("MESH_RAGGED_OK")
+    """
+)
+
+
+def _run_sub(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+
+
+@pytest.mark.slow
+def test_ragged_mesh_jax_bitwise_e2e():
+    r = _run_sub(_MESH_RAGGED_SCRIPT)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    assert "MESH_RAGGED_OK" in r.stdout
+
+
+# ---------------------------------------------------------- conservation
+def test_ragged_metrics_conservation_e2e(tmp_path):
+    """The declared RaggedFuse identities replay clean on a real ragged
+    sweep's iteration stats, and a violated identity is caught."""
+    from repro.obs.metrics import ConservationError, MetricsRegistry
+
+    g = rmat_graph(250, 2500, seed=147)
+    eng = _mk_engine(tmp_path, "cons", g, backend="jnp", batch_shards=2)
+    bfs, ppr = apps.lane_bfs(), apps.lane_ppr()
+    sweep = FusedSweep(eng, batch_shards=2, ragged=True)
+    sweep.run([
+        [LaneSeed(source=0, max_iters=8, token="b", program=bfs)],
+        [LaneSeed(source=1, max_iters=8, token="p", program=ppr)],
+    ])
+    reg = MetricsRegistry()
+    for s in sweep.iter_stats:
+        reg.ingest(s)
+    assert reg.verify_conservation() == []
+    assert reg.snapshot()["sweep.batches"] == \
+        reg.snapshot()["sweep.dispatches"]
+    eng.close()
+
+    # a stats row claiming more batches than dispatches must be flagged
+    bad = MetricsRegistry()
+    s = sweep.iter_stats[0].__class__(
+        iteration=0, live_lanes=2, shards_processed=1, shards_skipped=0,
+        bytes_read=0, selective_on=False, retired=0, backfilled=0,
+        time_s=0.0, dispatches=1, batches=2,
+    )
+    bad.ingest(s)
+    with pytest.raises(ConservationError):
+        bad.verify_conservation()
+
+
+def test_ragged_exec_stats_identities():
+    """ExecStats-level identities: ragged_dispatches <= batches <=
+    dispatches and sum(group_lanes) == ragged_lanes."""
+    from repro.core.executor import ExecStats
+    from repro.obs.metrics import ConservationError, MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.ingest(ExecStats(
+        dispatches=4, batches=4, ragged_dispatches=4, ragged_lanes=20,
+        group_lanes={0: 12, 1: 8}, shards_executed=8, overlap_s=0.01,
+    ))
+    assert reg.verify_conservation() == []
+    snap = reg.snapshot()
+    assert snap["exec.ragged_dispatches"] == 4
+    assert snap["exec.ragged_lanes"] == 20
+
+    bad = MetricsRegistry()
+    bad.ingest(ExecStats(
+        dispatches=2, batches=2, ragged_dispatches=2, ragged_lanes=9,
+        group_lanes={0: 4, 1: 4}, shards_executed=4,
+    ))
+    with pytest.raises(ConservationError):
+        bad.verify_conservation()
